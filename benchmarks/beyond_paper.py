@@ -1,0 +1,61 @@
+"""Beyond-paper extensions (EXPERIMENTS.md §Perf paper-side):
+
+1. HNSW-hierarchy ip-NSW (the paper's implementation footnote) vs the flat
+   max-norm-entry NSW: does the layered descent buy anything when the entry
+   heuristic already exploits the norm bias?
+2. Norm-filtered index: operationalize Fig 1 — index only the top-p%-norm
+   items; recall bound = ground-truth occupancy of the slice; index size,
+   build time and walk length shrink by 1/p.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import QUICK, dataset, emit
+from repro.core import HierarchicalIpNSW, NormFilteredIndex, recall_at_k
+from repro.core.norms import top_group_share
+from benchmarks.common import ipnsw_index, ipnsw_plus_index
+
+EF = 40
+
+
+def run():
+    rows = []
+    name = "image_like"
+    items, queries, gt = dataset(name)
+    q = jnp.asarray(queries)
+
+    flat = ipnsw_index(name, items)
+    r = flat.search(q, k=10, ef=EF)
+    rows.append(dict(bench="beyond_hnsw", variant="flat+maxnorm-entry",
+                     recall=round(recall_at_k(np.asarray(r.ids), gt), 4),
+                     evals=round(float(np.mean(np.asarray(r.evals))), 1)))
+    hier = HierarchicalIpNSW(max_degree=16, ef_construction=32,
+                             insert_batch=512).build(jnp.asarray(items))
+    r = hier.search(q, k=10, ef=EF)
+    rows.append(dict(bench="beyond_hnsw", variant="hierarchical",
+                     recall=round(recall_at_k(np.asarray(r.ids), gt), 4),
+                     evals=round(float(np.mean(np.asarray(r.evals))), 1)))
+    emit(rows, header=True)
+
+    rows2 = []
+    norms = np.linalg.norm(items, axis=1)
+    fracs = (0.1, 0.25) if QUICK else (0.05, 0.1, 0.25, 0.5, 1.0)
+    for frac in fracs:
+        bound = top_group_share(gt, norms, 100.0 * frac) if frac < 1.0 else 1.0
+        nf = NormFilteredIndex(keep_frac=frac, plus=True, max_degree=16,
+                               ef_construction=32, insert_batch=512).build(
+            jnp.asarray(items))
+        rf = nf.search(q, k=10, ef=EF)
+        rows2.append(dict(
+            bench="beyond_norm_filter", keep_frac=frac,
+            recall=round(recall_at_k(np.asarray(rf.ids), gt), 4),
+            recall_bound=round(bound, 4),
+            evals=round(float(np.mean(np.asarray(rf.evals))), 1),
+            index_items=len(nf.global_ids),
+        ))
+    emit(rows2, header=True)
+    return rows + rows2
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,90 @@
+"""Shared benchmark substrate: synthetic datasets with paper-like norm
+profiles + cached index builds (several figures reuse the same indexes).
+
+Sizes: full mode targets the paper's qualitative regime on CPU in minutes;
+REPRO_BENCH_QUICK=1 shrinks everything for CI.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import IpNSW, IpNSWPlus, exact_topk
+from repro.data import mips_dataset, mips_queries
+
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
+N_ITEMS = 4_000 if QUICK else 40_000
+N_QUERIES = 50 if QUICK else 500
+DIM = 48 if QUICK else 64
+K = 10
+
+# dataset profiles standing in for the paper's four datasets (Figure 2):
+#   music_like  — tight norms near the max (Yahoo!Music / Tiny5M shape)
+#   word_like   — heavy-tailed lognormal (WordVector shape)
+#   image_like  — heavy-tailed, higher TF (ImageNet shape)
+#   tiny_like   — tight norms, larger N (Tiny5M cardinality effect)
+PROFILES = {
+    "music_like": dict(profile="gaussian", seed=0),
+    "word_like": dict(profile="lognormal", seed=1),
+    "image_like": dict(profile="uniform_norm", seed=2),
+    "tiny_like": dict(profile="gaussian", seed=3, n_mult=2),
+}
+
+_cache: dict = {}
+
+
+def dataset(name: str):
+    key = ("data", name)
+    if key not in _cache:
+        p = dict(PROFILES[name])
+        n = N_ITEMS * p.pop("n_mult", 1)
+        items = mips_dataset(n, DIM, **p)
+        queries = mips_queries(N_QUERIES, DIM, seed=100 + hash(name) % 1000)
+        _, gt = exact_topk(jnp.asarray(queries), jnp.asarray(items), k=K)
+        _cache[key] = (items, queries, np.asarray(gt))
+    return _cache[key]
+
+
+def custom_dataset(tag: str, items: np.ndarray, queries: np.ndarray):
+    key = ("data", tag)
+    if key not in _cache:
+        _, gt = exact_topk(jnp.asarray(queries), jnp.asarray(items), k=K)
+        _cache[key] = (items, queries, np.asarray(gt))
+    return _cache[key]
+
+
+def ipnsw_index(tag: str, items: np.ndarray, **kw) -> IpNSW:
+    key = ("ipnsw", tag)
+    if key not in _cache:
+        params = dict(max_degree=16, ef_construction=32, insert_batch=512)
+        params.update(kw)
+        t0 = time.time()
+        _cache[key] = IpNSW(**params).build(jnp.asarray(items))
+        print(f"#   built ip-NSW[{tag}] n={items.shape[0]} in {time.time()-t0:.0f}s")
+    return _cache[key]
+
+
+def ipnsw_plus_index(tag: str, items: np.ndarray, **kw) -> IpNSWPlus:
+    key = ("ipnsw+", tag)
+    if key not in _cache:
+        params = dict(max_degree=16, ef_construction=32, insert_batch=512)
+        params.update(kw)
+        t0 = time.time()
+        _cache[key] = IpNSWPlus(**params).build(jnp.asarray(items))
+        print(f"#   built ip-NSW+[{tag}] n={items.shape[0]} in {time.time()-t0:.0f}s")
+    return _cache[key]
+
+
+def emit(rows: list, header: bool = False) -> None:
+    """Print benchmark rows as CSV."""
+    if not rows:
+        return
+    keys = list(rows[0])
+    if header:
+        print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r[k]) for k in keys))

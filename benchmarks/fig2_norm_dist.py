@@ -1,0 +1,30 @@
+"""Figure 2: norm distributions — percentiles and tailing factor
+(TF = 95th percentile / median; paper §5)."""
+import numpy as np
+
+from benchmarks.common import PROFILES, dataset, emit
+from repro.core.norms import tailing_factor
+
+
+def run():
+    rows = []
+    for name in PROFILES:
+        items, _, _ = dataset(name)
+        norms = np.linalg.norm(items, axis=1)
+        norms = norms / norms.max()
+        rows.append(
+            dict(
+                bench="fig2",
+                dataset=name,
+                tf=round(tailing_factor(norms), 3),
+                p50=round(float(np.percentile(norms, 50)), 3),
+                p95=round(float(np.percentile(norms, 95)), 3),
+                p99=round(float(np.percentile(norms, 99)), 3),
+            )
+        )
+    emit(rows, header=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Figure 4: average in-degree per norm group in the ip-NSW graph.
+Paper: top-5%-norm items reach 3.2-19.8x the dataset-average in-degree."""
+import numpy as np
+
+from benchmarks.common import PROFILES, dataset, emit, ipnsw_index
+from repro.core.graph import in_degrees
+from repro.core.norms import in_degree_by_group, norm_group_of
+
+
+def run():
+    rows = []
+    for name in PROFILES:
+        items, _, _ = dataset(name)
+        idx = ipnsw_index(name, items)
+        ind = in_degrees(idx.graph)
+        norms = np.linalg.norm(items, axis=1)
+        groups = norm_group_of(norms, 20)
+        by_group = in_degree_by_group(ind, groups, 20)
+        avg = ind.mean()
+        rows.append(
+            dict(
+                bench="fig4",
+                dataset=name,
+                avg_indegree=round(float(avg), 2),
+                top5_indegree=round(float(by_group[0]), 2),
+                top5_over_avg=round(float(by_group[0] / max(avg, 1e-9)), 2),
+                bottom50_over_avg=round(float(by_group[10:].mean() / max(avg, 1e-9)), 3),
+            )
+        )
+    emit(rows, header=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Figure 7: recall-vs-time, ip-NSW vs ip-NSW+ (+ Simple-LSH and brute-force
+context).  Wall time here is CPU (relative ordering only; the
+hardware-independent axis is Fig 8a, recall-vs-#evaluations)."""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import QUICK, dataset, emit, ipnsw_index, ipnsw_plus_index
+from repro.core import SimpleLSH, exact_topk, recall_at_k
+
+EFS = (10, 20, 40) if QUICK else (10, 20, 40, 80, 160)
+
+
+def _timed(fn, *args, repeats=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out[0] if isinstance(out, tuple) else out.ids)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out[0] if isinstance(out, tuple) else out.ids)
+    return out, (time.perf_counter() - t0) / repeats
+
+
+def run():
+    rows = []
+    name = "image_like"
+    items, queries, gt = dataset(name)
+    q = jnp.asarray(queries)
+    base = ipnsw_index(name, items)
+    plus = ipnsw_plus_index(name, items)
+    lsh = SimpleLSH(n_bits=96).build(jnp.asarray(items))
+
+    for ef in EFS:
+        r, dt = _timed(base.search, q, 10, ef)
+        rows.append(dict(bench="fig7", dataset=name, algo="ipnsw", knob=ef,
+                         recall=round(recall_at_k(np.asarray(r.ids), gt), 4),
+                         ms_per_query=round(dt / len(queries) * 1e3, 4)))
+        r, dt = _timed(plus.search, q, 10, ef)
+        rows.append(dict(bench="fig7", dataset=name, algo="ipnsw+", knob=ef,
+                         recall=round(recall_at_k(np.asarray(r.ids), gt), 4),
+                         ms_per_query=round(dt / len(queries) * 1e3, 4)))
+    for nc in (100, 400, 1600):
+        r, dt = _timed(lsh.search, q, 10, nc)
+        rows.append(dict(bench="fig7", dataset=name, algo="simple-lsh", knob=nc,
+                         recall=round(recall_at_k(np.asarray(r.ids), gt), 4),
+                         ms_per_query=round(dt / len(queries) * 1e3, 4)))
+    (vals, ids), dt = _timed(exact_topk, q, jnp.asarray(items), 10)
+    rows.append(dict(bench="fig7", dataset=name, algo="bruteforce", knob="",
+                     recall=1.0, ms_per_query=round(dt / len(queries) * 1e3, 4)))
+    emit(rows, header=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

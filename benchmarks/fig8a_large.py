@@ -1,0 +1,52 @@
+"""Fig-8a at larger cardinality (N=120k, closer to the paper's datasets) —
+demonstrates that ip-NSW+'s fixed angular-stage cost amortizes with N, plus
+a beyond-paper TUNED variant (k'=5, angular ef=5: half the seed budget).
+
+Not part of benchmarks.run (build time ~tens of minutes on CPU); run as
+  PYTHONPATH=src python -m benchmarks.fig8a_large
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import IpNSW, IpNSWPlus, exact_topk, recall_at_k
+from repro.data import mips_dataset, mips_queries
+
+N, D, B = 120_000, 64, 200
+EFS = (10, 20, 40, 80, 160)
+
+
+def run():
+    items = jnp.asarray(mips_dataset(N, D, profile="uniform_norm", seed=2))
+    queries = jnp.asarray(mips_queries(B, D, seed=7))
+    _, gt = exact_topk(queries, items, k=10)
+    gt = np.asarray(gt)
+
+    base = IpNSW(max_degree=16, ef_construction=32, insert_batch=512).build(
+        items, progress=True
+    )
+    plus = IpNSWPlus(max_degree=16, ef_construction=32, insert_batch=512).build(
+        items, progress=True
+    )
+
+    rows = []
+    for ef in EFS:
+        r = base.search(queries, k=10, ef=ef)
+        rows.append(dict(bench="fig8a_large", n=N, algo="ipnsw", ef=ef,
+                         evals=round(float(np.mean(np.asarray(r.evals))), 1),
+                         recall=round(recall_at_k(np.asarray(r.ids), gt), 4)))
+        r = plus.search(queries, k=10, ef=ef)
+        rows.append(dict(bench="fig8a_large", n=N, algo="ipnsw+", ef=ef,
+                         evals=round(float(np.mean(np.asarray(r.evals))), 1),
+                         recall=round(recall_at_k(np.asarray(r.ids), gt), 4)))
+        # beyond-paper: halve the angular seed budget
+        r = plus.search(queries, k=10, ef=ef, ang_ef=5, k_angular=5)
+        rows.append(dict(bench="fig8a_large", n=N, algo="ipnsw+tuned", ef=ef,
+                         evals=round(float(np.mean(np.asarray(r.evals))), 1),
+                         recall=round(recall_at_k(np.asarray(r.ids), gt), 4)))
+    emit(rows, header=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Figure 8a: recall vs #similarity-evaluations — the hardware-independent
+comparison.  One evaluation = one angular-or-inner-product computation
+(paper's counting).  The paper's claim: ip-NSW+ needs fewer evaluations for
+the same recall."""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import PROFILES, QUICK, dataset, emit, ipnsw_index, ipnsw_plus_index
+from repro.core import recall_at_k
+
+EFS = (10, 20, 40) if QUICK else (10, 20, 40, 80, 160, 320)
+
+
+def run():
+    rows = []
+    datasets = list(PROFILES) if not QUICK else ["image_like"]
+    for name in datasets:
+        items, queries, gt = dataset(name)
+        q = jnp.asarray(queries)
+        base = ipnsw_index(name, items)
+        plus = ipnsw_plus_index(name, items)
+        for ef in EFS:
+            r = base.search(q, k=10, ef=ef)
+            rows.append(dict(bench="fig8a", dataset=name, algo="ipnsw", ef=ef,
+                             evals=round(float(np.mean(np.asarray(r.evals))), 1),
+                             recall=round(recall_at_k(np.asarray(r.ids), gt), 4)))
+            r = plus.search(q, k=10, ef=ef)
+            rows.append(dict(bench="fig8a", dataset=name, algo="ipnsw+", ef=ef,
+                             evals=round(float(np.mean(np.asarray(r.evals))), 1),
+                             recall=round(recall_at_k(np.asarray(r.ids), gt), 4)))
+    emit(rows, header=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

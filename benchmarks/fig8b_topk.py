@@ -1,0 +1,35 @@
+"""Figure 8b: top-5 and top-20 MIPS — ip-NSW+ should win across k."""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import QUICK, dataset, emit, ipnsw_index, ipnsw_plus_index
+from repro.core import exact_topk, recall_at_k
+
+EFS = (20, 40) if QUICK else (20, 40, 80, 160)
+
+
+def run():
+    rows = []
+    name = "image_like"
+    items, queries, _ = dataset(name)
+    q = jnp.asarray(queries)
+    base = ipnsw_index(name, items)
+    plus = ipnsw_plus_index(name, items)
+    for k in (5, 20):
+        _, gt_k = exact_topk(q, jnp.asarray(items), k=k)
+        gt_k = np.asarray(gt_k)
+        for ef in EFS:
+            r = base.search(q, k=k, ef=max(ef, k))
+            rows.append(dict(bench="fig8b", k=k, algo="ipnsw", ef=ef,
+                             evals=round(float(np.mean(np.asarray(r.evals))), 1),
+                             recall=round(recall_at_k(np.asarray(r.ids), gt_k), 4)))
+            r = plus.search(q, k=k, ef=max(ef, k))
+            rows.append(dict(bench="fig8b", k=k, algo="ipnsw+", ef=ef,
+                             evals=round(float(np.mean(np.asarray(r.evals))), 1),
+                             recall=round(recall_at_k(np.asarray(r.ids), gt_k), 4)))
+    emit(rows, header=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

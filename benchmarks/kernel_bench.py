@@ -1,0 +1,51 @@
+"""Kernel micro-bench: exact-MIPS scan (the retrieval_cand hot path) — jnp
+backend wall time on CPU + analytic TPU roofline for the Pallas kernel.
+
+The Pallas kernel itself runs in interpret mode on CPU (orders of magnitude
+slower than compiled TPU — wall time meaningless), so this bench reports:
+  * jnp backend CPU µs/query (real measurement, sanity scaling)
+  * the kernel's analytic TPU time bound: N*d*4 bytes / 819 GB/s (item
+    streaming, the design's HBM-bound optimum) + MXU time at 197 TFLOP/s
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import QUICK, emit
+from repro.core import exact_topk
+
+HBM = 819e9
+PEAK = 197e12
+
+
+def run():
+    rows = []
+    n = 100_000 if QUICK else 1_000_000
+    for (b, d) in ((1, 64), (128, 64), (1, 300)):
+        items = jnp.asarray(np.random.default_rng(0).normal(size=(n, d)).astype(np.float32))
+        q = jnp.asarray(np.random.default_rng(1).normal(size=(b, d)).astype(np.float32))
+        vals, ids = exact_topk(q, items, k=10)  # warm
+        jax.block_until_ready(ids)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            vals, ids = exact_topk(q, items, k=10)
+            jax.block_until_ready(ids)
+        dt = (time.perf_counter() - t0) / 3
+        flops = 2.0 * b * n * d
+        bytes_hbm = n * d * 4.0 + b * d * 4.0
+        t_mem = bytes_hbm / HBM
+        t_mxu = flops / PEAK
+        rows.append(dict(
+            bench="kernel_mips_topk", B=b, N=n, d=d,
+            cpu_us_per_query=round(dt / b * 1e6, 1),
+            tpu_bound_us=round(max(t_mem, t_mxu) * 1e6, 1),
+            bound="memory" if t_mem > t_mxu else "compute",
+        ))
+    emit(rows, header=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

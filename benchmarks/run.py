@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure.  Prints CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # full
+  REPRO_BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run   # CI-sized
+"""
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    beyond_paper,
+    fig1_norm_bias,
+    fig2_norm_dist,
+    fig3_theorem1,
+    fig4_indegree,
+    fig5_computation,
+    fig7_recall_time,
+    fig8a_recall_evals,
+    fig8b_topk,
+    fig8c_robustness,
+    kernel_bench,
+    thm2_candidates,
+)
+
+MODULES = [
+    ("fig1_norm_bias", fig1_norm_bias),
+    ("fig2_norm_dist", fig2_norm_dist),
+    ("fig3_theorem1", fig3_theorem1),
+    ("fig4_indegree", fig4_indegree),
+    ("fig5_computation", fig5_computation),
+    ("fig7_recall_time", fig7_recall_time),
+    ("fig8a_recall_evals", fig8a_recall_evals),
+    ("fig8b_topk", fig8b_topk),
+    ("fig8c_robustness", fig8c_robustness),
+    ("thm2_candidates", thm2_candidates),
+    ("kernel_bench", kernel_bench),
+    ("beyond_paper", beyond_paper),
+]
+
+
+def main() -> None:
+    failures = []
+    for name, mod in MODULES:
+        print(f"# === {name} ===")
+        t0 = time.time()
+        try:
+            mod.run()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+        print(f"# {name} took {time.time()-t0:.0f}s")
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

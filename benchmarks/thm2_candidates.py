@@ -1,0 +1,53 @@
+"""§4.1 experiment behind Theorem 2: aggregate the ground-truth top-10 MIPS
+neighbors of the query's ground-truth top-10 ANGULAR neighbors -> candidate
+set of 100; its top-10 recall was 82.67% (Yahoo!Music) / 97.22% (ImageNet).
+Contrast: MIPS-of-MIPS candidates gave only 67.21% on ImageNet."""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import dataset, emit
+from repro.core import exact_topk, recall_at_k
+from repro.core.similarity import normalize
+
+
+def _neighbors_excl_self(it, sources, k):
+    """Top-k neighbors of dataset rows ``sources`` EXCLUDING the item itself
+    (a dataset item's own inner/angular similarity is trivially maximal)."""
+    _, nbr = exact_topk(it[jnp.asarray(sources)], it, k=k + 1)
+    nbr = np.asarray(nbr)
+    out = np.empty((len(sources), k), np.int32)
+    for i, s in enumerate(sources):
+        row = nbr[i][nbr[i] != s]
+        out[i] = row[:k]
+    return out
+
+
+def run():
+    rows = []
+    for name in ("music_like", "image_like"):
+        items, queries, gt = dataset(name)
+        it = jnp.asarray(items)
+        q = jnp.asarray(queries)
+        # ground-truth top-10 angular neighbors of each query
+        _, ang = exact_topk(q, normalize(it), k=10)
+        # ground-truth top-10 MIPS neighbors of EVERY angular neighbor
+        uniq, inv = np.unique(np.asarray(ang).reshape(-1), return_inverse=True)
+        nbr_of = _neighbors_excl_self(it, uniq, 10)
+        cand_ang = nbr_of[inv].reshape(len(queries), -1)  # [B,100]
+        rec_ang = recall_at_k(cand_ang, gt)
+
+        # contrast: MIPS neighbors of the query's MIPS neighbors
+        uniq2, inv2 = np.unique(gt.reshape(-1), return_inverse=True)
+        nbr2 = _neighbors_excl_self(it, uniq2, 10)
+        cand_mips = nbr2[inv2].reshape(len(queries), -1)
+        rec_mips = recall_at_k(cand_mips, gt)
+
+        rows.append(dict(bench="thm2", dataset=name,
+                         recall_mips_of_angular=round(rec_ang, 4),
+                         recall_mips_of_mips=round(rec_mips, 4)))
+    emit(rows, header=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""LM serving-substrate demo: greedy generation through the prefill +
+ring-buffer-decode path on a reduced gemma3-style hybrid (5 sliding : 1
+global attention), verifying decode-vs-full-forward consistency live.
+
+  PYTHONPATH=src python examples/lm_decode.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import (
+    TransformerConfig,
+    forward,
+    init,
+    serve_prefill,
+    serve_step,
+)
+
+
+def main():
+    cfg = TransformerConfig(
+        name="gemma3-tiny",
+        n_layers=6,
+        d_model=128,
+        n_heads=4,
+        n_kv=2,
+        head_dim=32,
+        d_ff=256,
+        vocab=512,
+        window_pattern=(16, 16, 16, 16, 16, None),  # 5:1 local:global
+        tied_embed=True,
+        dtype=jnp.float32,
+        attn_chunk=16,
+        kv_chunk=16,
+        remat=False,
+    )
+    params, _ = init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    B, S, STEPS = 2, 32, 16
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)).astype(np.int32))
+
+    print(f"prefill {S} tokens (cache: sliding layers keep {16} slots, "
+          f"global layers {S + STEPS})...")
+    logits, caches = serve_prefill(params, prompt, cfg, max_len=S + STEPS)
+    toks = prompt
+    nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+    step = jax.jit(
+        lambda p, c, t, off: serve_step(p, c, t, off, cfg),
+    )
+    max_err = 0.0
+    for i in range(STEPS):
+        lg, caches = step(params, caches, nxt, jnp.int32(S + i))
+        toks = jnp.concatenate([toks, nxt], axis=1)
+        # cross-check against the full forward every few steps
+        if i % 4 == 0:
+            lg_full, _ = forward(params, toks, cfg)
+            rel = float(jnp.max(jnp.abs(lg_full[:, -1] - lg))) / float(
+                jnp.max(jnp.abs(lg_full[:, -1]))
+            )
+            max_err = max(max_err, rel)
+            assert bool(
+                (jnp.argmax(lg_full[:, -1], -1) == jnp.argmax(lg, -1)).all()
+            ), "decode diverged from forward"
+        nxt = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+
+    print(f"generated {STEPS} tokens/seq; decode-vs-forward max relative "
+          f"logit err = {max_err:.2e} (fp32 reduction-order noise; argmax "
+          f"identical at every checked step)")
+    print("sequences:", np.asarray(toks)[:, -8:].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Assigned-architecture registry: --arch <id> resolves here."""
+import importlib
+
+_MODULES = {
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "meshgraphnet": "repro.configs.meshgraphnet",
+    "sasrec": "repro.configs.sasrec",
+    "dlrm-rm2": "repro.configs.dlrm_rm2",
+    "mind": "repro.configs.mind",
+    "dien": "repro.configs.dien",
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_arch(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id]).ARCH
+
+
+def all_cells():
+    """Every (arch, shape) pair — the 40 assigned cells."""
+    cells = []
+    for aid in ARCH_IDS:
+        arch = get_arch(aid)
+        for shape in arch.shape_names():
+            cells.append((aid, shape))
+    return cells

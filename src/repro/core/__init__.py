@@ -1,0 +1,32 @@
+"""The paper's contribution: proximity-graph MIPS (ip-NSW / ip-NSW+) as a
+composable, TPU-native JAX index library."""
+from repro.core.brute_force import exact_topk
+from repro.core.graph import GraphIndex, empty_graph, in_degrees, out_degrees
+from repro.core.hnsw import HierarchicalIpNSW
+from repro.core.ipnsw import IpNSW
+from repro.core.ipnsw_plus import IpNSWPlus, PlusResult
+from repro.core.lsh import SimpleLSH
+from repro.core.metrics import recall_at_k, recall_curve
+from repro.core.norm_filter import NormFilteredIndex
+from repro.core.search import SearchResult, beam_search
+from repro.core.similarity import Similarity, normalize
+
+__all__ = [
+    "GraphIndex",
+    "HierarchicalIpNSW",
+    "NormFilteredIndex",
+    "IpNSW",
+    "IpNSWPlus",
+    "PlusResult",
+    "SearchResult",
+    "Similarity",
+    "SimpleLSH",
+    "beam_search",
+    "empty_graph",
+    "exact_topk",
+    "in_degrees",
+    "normalize",
+    "out_degrees",
+    "recall_at_k",
+    "recall_curve",
+]

@@ -1,0 +1,221 @@
+"""Sharded MIPS index — the multi-pod serving path.
+
+Items are row-sharded into P contiguous shards; every shard builds its OWN
+proximity graph(s) over its local items (graph edges never cross shards, so a
+shard is a self-contained index that can be rebuilt/replaced independently —
+this is the fault-tolerance unit).  A query fans out to all shards, walks the
+local graph, and the per-shard top-k (k ids + scores, tiny) are merged with a
+single all-gather + static top-k.
+
+Communication cost per query batch B: one all-gather of [B, k] fp32 + [B, k]
+int32 over the ``model`` axis — k*P*8 bytes per query, independent of N.
+That is the collective term analysed in EXPERIMENTS.md §Roofline.
+
+Elastic / degraded serving: ``shard_mask`` disables dead shards at merge time
+(their scores become -inf) so a lost host degrades recall instead of
+availability; the launcher rebuilds the missing shard from the checkpointed
+item partition and re-enables it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.graph import GraphIndex
+from repro.core.search import beam_search
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+class ShardedIndex(NamedTuple):
+    """Stacked per-shard graphs (leading axis = shard).
+
+    ip: GraphIndex with adj [P, Nloc, M], items [P, Nloc, d], size/entry [P]
+    ang: same for the angular graph, or None for plain ip-NSW
+    offset: [P] global-id offset of every shard
+    """
+
+    ip: GraphIndex
+    ang: Optional[GraphIndex]
+    offset: jax.Array
+
+
+def stack_shards(
+    ip_graphs: Sequence[GraphIndex],
+    ang_graphs: Optional[Sequence[GraphIndex]] = None,
+) -> ShardedIndex:
+    stack = lambda *xs: jnp.stack(xs)
+    ip = jax.tree.map(stack, *ip_graphs)
+    ang = jax.tree.map(stack, *ang_graphs) if ang_graphs is not None else None
+    sizes = [int(g.items.shape[0]) for g in ip_graphs]
+    offsets = jnp.asarray(
+        [sum(sizes[:i]) for i in range(len(sizes))], jnp.int32
+    )
+    return ShardedIndex(ip=ip, ang=ang, offset=offsets)
+
+
+def build_sharded(
+    items: jax.Array,
+    n_shards: int,
+    *,
+    plus: bool = True,
+    **index_kwargs,
+) -> ShardedIndex:
+    """Split ``items`` into ``n_shards`` contiguous row shards and build one
+    local index per shard (host loop; each build is jit-compiled inside)."""
+    from repro.core.ipnsw import IpNSW
+    from repro.core.ipnsw_plus import IpNSWPlus
+
+    n = items.shape[0]
+    per = -(-n // n_shards)
+    ip_graphs, ang_graphs = [], []
+    for s in range(n_shards):
+        local = items[s * per : min((s + 1) * per, n)]
+        if local.shape[0] < per:  # pad the ragged tail shard with zeros
+            pad = per - local.shape[0]
+            local = jnp.concatenate(
+                [local, jnp.zeros((pad, items.shape[-1]), items.dtype)]
+            )
+        if plus:
+            idx = IpNSWPlus(**index_kwargs).build(local)
+            ip_graphs.append(idx.ip_graph)
+            ang_graphs.append(idx.ang_graph)
+        else:
+            idx = IpNSW(**index_kwargs).build(local)
+            ip_graphs.append(idx.graph)
+    return stack_shards(ip_graphs, ang_graphs if plus else None)
+
+
+# ---------------------------------------------------------------------------
+# Local search bodies (operate on a single shard's graphs)
+# ---------------------------------------------------------------------------
+
+
+def _local_ipnsw(
+    graphs: ShardedIndex, queries: jax.Array, *, k: int, ef: int, max_steps: int
+):
+    g = graphs.ip
+    b = queries.shape[0]
+    init = jnp.broadcast_to(g.entry[None, None], (b, 1)).astype(jnp.int32)
+    res = beam_search(g, queries, init, pool_size=max(ef, k), max_steps=max_steps, k=k)
+    return res.ids, res.scores, res.evals
+
+
+def _local_ipnsw_plus(
+    graphs: ShardedIndex,
+    queries: jax.Array,
+    *,
+    k: int,
+    ef: int,
+    max_steps: int,
+    ang_ef: int = 10,
+    k_angular: int = 10,
+):
+    from repro.core.ipnsw_plus import _seed_from_angular
+
+    b = queries.shape[0]
+    ang = graphs.ang
+    init_a = jnp.broadcast_to(ang.entry[None, None], (b, 1)).astype(jnp.int32)
+    a = beam_search(
+        ang,
+        queries,
+        init_a,
+        pool_size=max(ang_ef, k_angular),
+        max_steps=2 * max(ang_ef, k_angular),
+        k=k_angular,
+    )
+    seeds = _seed_from_angular(graphs.ip.adj, a.ids)
+    r = beam_search(
+        graphs.ip, queries, seeds, pool_size=max(ef, k), max_steps=max_steps, k=k
+    )
+    return r.ids, r.scores, a.evals + r.evals
+
+
+# ---------------------------------------------------------------------------
+# Merge + drivers
+# ---------------------------------------------------------------------------
+
+
+def _merge_topk(all_ids, all_scores, k: int, shard_mask=None):
+    """[P, B, k] -> replicated global top-k [B, k] (ids already global)."""
+    p = all_ids.shape[0]
+    if shard_mask is not None:
+        all_scores = jnp.where(shard_mask[:, None, None], all_scores, NEG_INF)
+    ids = jnp.moveaxis(all_ids, 0, 1).reshape(all_ids.shape[1], p * k)
+    scores = jnp.moveaxis(all_scores, 0, 1).reshape(all_ids.shape[1], p * k)
+    vals, sel = jax.lax.top_k(scores, k)
+    out_ids = jnp.take_along_axis(ids, sel, axis=-1)
+    return jnp.where(vals > NEG_INF, out_ids, -1), vals
+
+
+def sharded_search(
+    index: ShardedIndex,
+    queries: jax.Array,
+    *,
+    mesh: Mesh,
+    axis: str = "model",
+    k: int = 10,
+    ef: int = 64,
+    max_steps: Optional[int] = None,
+    plus: bool = True,
+    shard_mask: Optional[jax.Array] = None,
+):
+    """shard_map driver: local walk on every shard + all-gather top-k merge.
+
+    Queries are replicated over ``axis`` (shard the batch over the remaining
+    mesh axes with in_shardings at the jit level).
+    """
+    steps = max_steps if max_steps is not None else 2 * ef
+    local_fn = _local_ipnsw_plus if plus else _local_ipnsw
+    mask = shard_mask if shard_mask is not None else jnp.ones(
+        (index.offset.shape[0],), bool
+    )
+
+    def body(idx_blk: ShardedIndex, mask_blk, q):
+        blk = jax.tree.map(lambda x: x[0], idx_blk)  # strip unit shard dim
+        ids, scores, evals = local_fn(blk, q, k=k, ef=ef, max_steps=steps)
+        gids = jnp.where(ids >= 0, ids + blk.offset, -1)
+        all_ids = jax.lax.all_gather(gids, axis)        # [P, B, k]
+        all_scores = jax.lax.all_gather(scores, axis)
+        all_mask = jax.lax.all_gather(mask_blk[0], axis)
+        out_ids, out_scores = _merge_topk(all_ids, all_scores, k, all_mask)
+        total_evals = jax.lax.psum(evals, axis)
+        return out_ids, out_scores, total_evals
+
+    spec_idx = jax.tree.map(lambda _: P(axis), index)
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(spec_idx, P(axis), P()),
+        out_specs=(P(), P(), P()),
+        check_vma=False,
+    )(index, mask, queries)
+
+
+def sharded_search_reference(
+    index: ShardedIndex,
+    queries: jax.Array,
+    *,
+    k: int = 10,
+    ef: int = 64,
+    max_steps: Optional[int] = None,
+    plus: bool = True,
+    shard_mask: Optional[jax.Array] = None,
+):
+    """Single-device oracle: identical math to ``sharded_search`` with the
+    shard dimension mapped by vmap instead of shard_map.  Used by tests to
+    pin down the distributed semantics on CPU."""
+    steps = max_steps if max_steps is not None else 2 * ef
+    local_fn = _local_ipnsw_plus if plus else _local_ipnsw
+
+    def one(blk: ShardedIndex):
+        ids, scores, evals = local_fn(blk, queries, k=k, ef=ef, max_steps=steps)
+        return jnp.where(ids >= 0, ids + blk.offset, -1), scores, evals
+
+    all_ids, all_scores, all_evals = jax.vmap(one)(index)
+    out_ids, out_scores = _merge_topk(all_ids, all_scores, k, shard_mask)
+    return out_ids, out_scores, all_evals.sum(axis=0)

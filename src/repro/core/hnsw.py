@@ -1,0 +1,130 @@
+"""Hierarchical NSW (the paper's footnote: "ip-NSW actually adopts multiple
+hierarchical layers of NSW (known as HNSW)").
+
+Level assignment: item level ~ floor(-ln(U) * mL), mL = 1/ln(M) (Malkov &
+Yashunin).  Level k holds every item with level >= k as its own NSW graph
+(built by core/build.py over the subset); level 0 holds all items.
+
+Search descends: greedy walk (beam=1) from the top level's entry to level 1,
+then a full beam search on level 0 seeded at the descent result.  Upper
+levels are tiny (N/M^k items), so the descent costs O(levels * M) extra
+evaluations but starts the level-0 walk near the query's neighborhood —
+useful when the entry-point heuristic (max-norm item) is weak, e.g. flat
+norm distributions.
+
+TPU mapping: every level is a dense GraphIndex; per-level local ids map to
+global ids via ``ids[level]`` arrays; the descent is the same batched beam
+search with pool_size=1.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.build import build_graph
+from repro.core.graph import GraphIndex
+from repro.core.search import SearchResult, beam_search
+from repro.core.similarity import Similarity
+
+
+def assign_levels(n: int, max_degree: int, seed: int = 0, max_levels: int = 6):
+    rng = np.random.default_rng(seed)
+    ml = 1.0 / np.log(max(max_degree, 2))
+    lv = np.floor(-np.log(rng.uniform(1e-12, 1.0, n)) * ml).astype(np.int32)
+    return np.minimum(lv, max_levels - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "ef", "max_steps"))
+def _level0_search(graph, queries, init, *, k, ef, max_steps):
+    return beam_search(graph, queries, init, pool_size=max(ef, k),
+                       max_steps=max_steps, k=k)
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps",))
+def _greedy_descend(graph, queries, init, *, max_steps):
+    r = beam_search(graph, queries, init, pool_size=1, max_steps=max_steps, k=1)
+    return r.ids[:, 0], r.evals
+
+
+@dataclass
+class HierarchicalIpNSW:
+    """ip-NSW with HNSW-style layers (inner-product similarity on every
+    level)."""
+
+    max_degree: int = 16
+    ef_construction: int = 64
+    insert_batch: int = 256
+    seed: int = 0
+    levels: List[GraphIndex] = field(default_factory=list)
+    ids: List[np.ndarray] = field(default_factory=list)       # level -> global ids
+    inv: List[np.ndarray] = field(default_factory=list)       # global -> local (-1)
+
+    def build(self, items: jax.Array, progress: bool = False):
+        items = jnp.asarray(items)
+        n = items.shape[0]
+        lv = assign_levels(n, self.max_degree, self.seed)
+        n_levels = int(lv.max()) + 1
+        self.levels, self.ids, self.inv = [], [], []
+        for level in range(n_levels):
+            sel = np.nonzero(lv >= level)[0].astype(np.int32)
+            if len(sel) < 2:
+                break
+            sub = items[jnp.asarray(sel)]
+            g = build_graph(
+                sub,
+                similarity=Similarity.INNER_PRODUCT,
+                max_degree=self.max_degree if level == 0 else self.max_degree // 2 or 2,
+                ef_construction=self.ef_construction if level == 0 else max(
+                    self.ef_construction // 4, 8
+                ),
+                insert_batch=self.insert_batch,
+                progress=progress and level == 0,
+            )
+            inv = np.full(n, -1, np.int32)
+            inv[sel] = np.arange(len(sel), dtype=np.int32)
+            self.levels.append(g)
+            self.ids.append(sel)
+            self.inv.append(inv)
+        return self
+
+    def search(self, queries: jax.Array, k: int = 10, ef: int = 64,
+               max_steps: Optional[int] = None) -> SearchResult:
+        assert self.levels, "call build() first"
+        b = queries.shape[0]
+        extra_evals = jnp.zeros((b,), jnp.int32)
+
+        # descend from the top level down to level 1
+        cur_global = None
+        for level in range(len(self.levels) - 1, 0, -1):
+            g = self.levels[level]
+            if cur_global is None:
+                init = jnp.broadcast_to(g.entry[None, None], (b, 1)).astype(jnp.int32)
+            else:
+                local = jnp.asarray(self.inv[level])[cur_global]
+                local = jnp.where(local >= 0, local, g.entry)
+                init = local[:, None].astype(jnp.int32)
+            best_local, ev = _greedy_descend(
+                g, queries, init, max_steps=4 * self.max_degree
+            )
+            cur_global = jnp.asarray(self.ids[level])[jnp.maximum(best_local, 0)]
+            extra_evals = extra_evals + ev
+
+        g0 = self.levels[0]
+        if cur_global is None:
+            init0 = jnp.broadcast_to(g0.entry[None, None], (b, 1)).astype(jnp.int32)
+        else:
+            init0 = cur_global[:, None].astype(jnp.int32)  # level0 local == global
+        steps = max_steps if max_steps is not None else 2 * ef
+        res = _level0_search(g0, queries, init0, k=k, ef=ef, max_steps=steps)
+        return SearchResult(
+            ids=res.ids,
+            scores=res.scores,
+            evals=res.evals + extra_evals,
+            steps=res.steps,
+            visited=res.visited,
+        )

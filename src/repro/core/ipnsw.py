@@ -1,0 +1,67 @@
+"""ip-NSW (Morozov & Babenko 2018) — the paper's baseline.
+
+NSW built and searched with the raw inner product as similarity.  This is the
+algorithm whose norm bias §3 of the paper analyses.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.build import build_graph
+from repro.core.graph import GraphIndex
+from repro.core.search import SearchResult, beam_search
+from repro.core.similarity import Similarity
+
+
+@functools.partial(jax.jit, static_argnames=("pool_size", "max_steps", "k"))
+def _search(graph: GraphIndex, queries, *, pool_size: int, max_steps: int, k: int):
+    b = queries.shape[0]
+    init = jnp.broadcast_to(graph.entry[None, None], (b, 1)).astype(jnp.int32)
+    return beam_search(
+        graph, queries, init, pool_size=pool_size, max_steps=max_steps, k=k
+    )
+
+
+@dataclass
+class IpNSW:
+    """Inner-product NSW index.
+
+    build parameters mirror the paper: ``max_degree`` = M, ``ef_construction``
+    = candidate-pool size l used during insertion.
+    """
+
+    max_degree: int = 16
+    ef_construction: int = 64
+    insert_batch: int = 128
+    reverse_links: bool = True
+    graph: Optional[GraphIndex] = None
+
+    def build(self, items: jax.Array, progress: bool = False) -> "IpNSW":
+        self.graph = build_graph(
+            items,
+            similarity=Similarity.INNER_PRODUCT,
+            max_degree=self.max_degree,
+            ef_construction=self.ef_construction,
+            insert_batch=self.insert_batch,
+            reverse_links=self.reverse_links,
+            progress=progress,
+        )
+        return self
+
+    def search(
+        self,
+        queries: jax.Array,
+        k: int = 10,
+        ef: int = 64,
+        max_steps: Optional[int] = None,
+    ) -> SearchResult:
+        assert self.graph is not None, "call build() first"
+        steps = max_steps if max_steps is not None else 2 * ef
+        return _search(
+            self.graph, queries, pool_size=max(ef, k), max_steps=steps, k=k
+        )

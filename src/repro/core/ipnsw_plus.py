@@ -1,0 +1,251 @@
+"""ip-NSW+ (the paper's contribution, §4, Algorithm 3).
+
+Two proximity graphs over the same items:
+  A_s — angular NSW (similarity x.y/|x||y|; small M, l — paper uses 10/10)
+  G_s — inner-product NSW (same parameters as plain ip-NSW)
+
+Query processing (Algorithm 3):
+  1. walk A_s to find the top-k' *angular* neighbors of q;
+  2. seed the candidate pool with the G_s-neighbors of those angular
+     neighbors ("the MIPS neighbor of an angular neighbor is likely an MIPS
+     neighbor", Theorem 2);
+  3. refine with a standard walk on G_s.
+
+Construction (§4.2): items are inserted (mini-batched here, see build.py) into
+A_s first; their G_s neighbors are then found with the ip-NSW+ search itself
+(seeded from the just-computed angular neighbors), which the paper reports
+gives more accurate inner-product neighbors than plain Algorithm-1 insertion.
+
+TPU adaptation: both walks are the batched lock-step beam search of
+``search.py``; the angular graph stores unit-normalized items so both walks
+use the same inner-product engine (similarity.py note).  Seeding (Alg 3 lines
+3-5) is one adjacency-row gather — [B, k'] ids -> [B, k'*M_g] seed matrix.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.build import (
+    _bootstrap_neighbors,
+    commit_batch,
+    find_neighbors,
+)
+from repro.core.graph import GraphIndex, empty_graph
+from repro.core.search import SearchResult, beam_search
+from repro.core.similarity import normalize
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+class PlusResult(NamedTuple):
+    ids: jax.Array          # [B, k] final MIPS ids
+    scores: jax.Array       # [B, k] inner products
+    evals: jax.Array        # [B] total similarity evaluations (angular + ip)
+    ang_evals: jax.Array    # [B]
+    ip_evals: jax.Array     # [B]
+    visited_ang: jax.Array  # [B, Va] ids scored on A_s (Fig-5 data)
+    visited_ip: jax.Array   # [B, Vi] ids scored on G_s
+
+
+def _seed_from_angular(ip_adj: jax.Array, ang_ids: jax.Array) -> jax.Array:
+    """Alg 3 lines 3-5: candidate seeds = G_s out-neighbors of the angular
+    results.  ang_ids: [B, k'] (-1 padded) -> [B, k'*M] (-1 padded)."""
+    safe = jnp.maximum(ang_ids, 0)
+    rows = ip_adj[safe]                      # [B, k', M]
+    rows = jnp.where(ang_ids[..., None] >= 0, rows, -1)
+    b = ang_ids.shape[0]
+    return rows.reshape(b, -1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "ef", "ang_ef", "k_angular", "max_steps", "ang_max_steps"),
+)
+def _search_plus(
+    ang_graph: GraphIndex,
+    ip_graph: GraphIndex,
+    queries: jax.Array,
+    *,
+    k: int,
+    ef: int,
+    ang_ef: int,
+    k_angular: int,
+    max_steps: int,
+    ang_max_steps: int,
+) -> PlusResult:
+    b = queries.shape[0]
+    init_a = jnp.broadcast_to(ang_graph.entry[None, None], (b, 1)).astype(jnp.int32)
+    # Angular ranking for a fixed query is monotone in q . x_hat, so the raw
+    # query works against the normalized angular items (similarity.py).
+    ang = beam_search(
+        ang_graph,
+        queries,
+        init_a,
+        pool_size=max(ang_ef, k_angular),
+        max_steps=ang_max_steps,
+        k=k_angular,
+    )
+    seeds = _seed_from_angular(ip_graph.adj, ang.ids)
+    ip = beam_search(
+        ip_graph,
+        queries,
+        seeds,
+        pool_size=max(ef, k),
+        max_steps=max_steps,
+        k=k,
+    )
+    return PlusResult(
+        ids=ip.ids,
+        scores=ip.scores,
+        evals=ang.evals + ip.evals,
+        ang_evals=ang.evals,
+        ip_evals=ip.evals,
+        visited_ang=ang.visited,
+        visited_ip=ip.visited,
+    )
+
+
+@dataclass
+class IpNSWPlus:
+    """Dual-graph MIPS index (paper Algorithm 3 + §4.2 joint construction).
+
+    Defaults mirror the paper: the angular graph uses M=10, l=10 without
+    dataset-specific tuning; the inner-product graph uses the same parameters
+    as plain ip-NSW.
+    """
+
+    max_degree: int = 16          # M for G_s
+    ef_construction: int = 64     # l for G_s insertion
+    ang_degree: int = 10          # M for A_s (paper: 10)
+    ang_ef: int = 10              # l for A_s (paper: 10)
+    k_angular: int = 10           # k' — angular results whose G_s edges seed C
+    insert_batch: int = 128
+    reverse_links: bool = True
+    ang_graph: Optional[GraphIndex] = field(default=None)
+    ip_graph: Optional[GraphIndex] = field(default=None)
+
+    # ------------------------------------------------------------------ build
+
+    def build(self, items: jax.Array, progress: bool = False) -> "IpNSWPlus":
+        items = jnp.asarray(items)
+        n = items.shape[0]
+        ang_items = normalize(items)
+        norms = jnp.linalg.norm(items, axis=-1)
+        ang_norms = jnp.ones((n,), jnp.float32)
+
+        ang = empty_graph(ang_items, self.ang_degree)
+        ip = empty_graph(items, self.max_degree)
+
+        first = min(self.insert_batch, n)
+        ids0 = jnp.arange(first, dtype=jnp.int32)
+        a_nbr0, a_sc0 = _bootstrap_neighbors(ang_items[:first], self.ang_degree)
+        ang = commit_batch(
+            ang, ids0, a_nbr0, a_sc0, ang_norms, reverse_links=self.reverse_links
+        )
+        g_nbr0, g_sc0 = _bootstrap_neighbors(items[:first], self.max_degree)
+        ip = commit_batch(
+            ip, ids0, g_nbr0, g_sc0, norms, reverse_links=self.reverse_links
+        )
+
+        ang_steps = 2 * max(self.ang_ef, self.ang_degree)
+        ip_steps = 2 * self.ef_construction
+
+        start = first
+        while start < n:
+            stop = min(start + self.insert_batch, n)
+            bids = jnp.arange(start, stop, dtype=jnp.int32)
+
+            # 1. insert into the angular graph (plain Algorithm 2)
+            a_nbr, a_sc = find_neighbors(
+                ang,
+                ang_items[start:stop],
+                max_degree=self.ang_degree,
+                ef=max(self.ang_ef, self.ang_degree),
+                max_steps=ang_steps,
+            )
+            ang = commit_batch(
+                ang, bids, a_nbr, a_sc, ang_norms, reverse_links=self.reverse_links
+            )
+
+            # 2. insert into the ip graph with the ip-NSW+ search itself:
+            #    seeds = G_s neighbors of the just-found angular neighbors.
+            g_nbr, g_sc = _find_ip_neighbors_seeded(
+                ip,
+                items[start:stop],
+                a_nbr[:, : self.k_angular],
+                max_degree=self.max_degree,
+                ef=self.ef_construction,
+                max_steps=ip_steps,
+            )
+            ip = commit_batch(
+                ip, bids, g_nbr, g_sc, norms, reverse_links=self.reverse_links
+            )
+
+            if progress and (start // self.insert_batch) % 20 == 0:
+                print(f"  inserted {stop}/{n}")
+            start = stop
+
+        self.ang_graph, self.ip_graph = ang, ip
+        return self
+
+    # ----------------------------------------------------------------- search
+
+    def search(
+        self,
+        queries: jax.Array,
+        k: int = 10,
+        ef: int = 64,
+        ang_ef: Optional[int] = None,
+        k_angular: Optional[int] = None,
+        max_steps: Optional[int] = None,
+    ) -> PlusResult:
+        assert self.ip_graph is not None, "call build() first"
+        ang_ef = ang_ef if ang_ef is not None else self.ang_ef
+        k_ang = k_angular if k_angular is not None else self.k_angular
+        steps = max_steps if max_steps is not None else 2 * ef
+        return _search_plus(
+            self.ang_graph,
+            self.ip_graph,
+            queries,
+            k=k,
+            ef=ef,
+            ang_ef=ang_ef,
+            k_angular=k_ang,
+            max_steps=steps,
+            ang_max_steps=2 * max(ang_ef, k_ang),
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("max_degree", "ef", "max_steps"))
+def _find_ip_neighbors_seeded(
+    ip_graph: GraphIndex,
+    batch_items: jax.Array,
+    ang_nbr_ids: jax.Array,
+    *,
+    max_degree: int,
+    ef: int,
+    max_steps: int,
+):
+    """§4.2 insertion: find an item's G_s neighbors by the ip-NSW+ search
+    (angular-seeded walk) instead of a cold entry-vertex walk."""
+    seeds = _seed_from_angular(ip_graph.adj, ang_nbr_ids)
+    # include the entry vertex so the very first batches (sparse adjacency)
+    # still have a valid start.
+    b = batch_items.shape[0]
+    entry = jnp.broadcast_to(ip_graph.entry[None, None], (b, 1)).astype(jnp.int32)
+    seeds = jnp.concatenate([seeds, entry], axis=-1)
+    res = beam_search(
+        ip_graph,
+        batch_items,
+        seeds,
+        pool_size=ef,
+        max_steps=max_steps,
+        k=max_degree,
+    )
+    ids = jnp.where(res.scores > NEG_INF, res.ids, -1)
+    return ids, res.scores

@@ -1,0 +1,79 @@
+"""Simple-LSH (Neyshabur & Srebro 2015) — the LSH baseline of the paper's §5.
+
+MIPS -> angular NNS reduction: items are scaled into the unit ball and
+augmented with sqrt(1 - |x|^2); queries are normalized and augmented with 0.
+Sign-random-projection codes then preserve the angle of the augmented pair.
+
+We use the hamming-ranking variant (rank all items by code agreement, rerank
+the top-T by exact inner product): it is the strongest form of the baseline
+and maps to TPU-friendly matmuls — code agreement of {-1,+1} codes is a plain
+[B, n_bits] x [N, n_bits] matmul.  Search effort is controlled by T
+(= ``n_candidates``), so #similarity-evaluations is directly comparable with
+the graph methods.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.similarity import gather_scores
+
+
+class LSHResult(NamedTuple):
+    ids: jax.Array      # [B, k]
+    scores: jax.Array   # [B, k]
+    evals: jax.Array    # [B] — exact rerank evaluations (=T)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_candidates"))
+def _lsh_search(codes, planes, items, queries, *, k: int, n_candidates: int):
+    qn = queries / jnp.maximum(
+        jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-12
+    )
+    q_aug = jnp.concatenate([qn, jnp.zeros(qn.shape[:-1] + (1,), qn.dtype)], -1)
+    q_codes = jnp.where(q_aug @ planes >= 0, 1.0, -1.0).astype(jnp.float32)
+    agreement = jnp.einsum(
+        "bh,nh->bn", q_codes, codes, preferred_element_type=jnp.float32
+    )
+    _, cand = jax.lax.top_k(agreement, n_candidates)
+    exact = gather_scores(queries, items, cand.astype(jnp.int32))
+    vals, sel = jax.lax.top_k(exact, k)
+    ids = jnp.take_along_axis(cand, sel, axis=-1).astype(jnp.int32)
+    b = queries.shape[0]
+    return LSHResult(
+        ids=ids,
+        scores=vals,
+        evals=jnp.full((b,), n_candidates, jnp.int32),
+    )
+
+
+@dataclass
+class SimpleLSH:
+    n_bits: int = 64
+    seed: int = 0
+    codes: Optional[jax.Array] = None
+    planes: Optional[jax.Array] = None
+    items: Optional[jax.Array] = None
+
+    def build(self, items: jax.Array) -> "SimpleLSH":
+        items = jnp.asarray(items)
+        norms = jnp.linalg.norm(items, axis=-1, keepdims=True)
+        scaled = items / jnp.max(norms)
+        tail = jnp.sqrt(jnp.maximum(1.0 - jnp.sum(scaled * scaled, -1, keepdims=True), 0.0))
+        aug = jnp.concatenate([scaled, tail], axis=-1)
+        key = jax.random.PRNGKey(self.seed)
+        planes = jax.random.normal(key, (aug.shape[-1], self.n_bits), jnp.float32)
+        self.codes = jnp.where(aug @ planes >= 0, 1.0, -1.0).astype(jnp.float32)
+        self.planes = planes
+        self.items = items
+        return self
+
+    def search(self, queries: jax.Array, k: int = 10, n_candidates: int = 100):
+        assert self.codes is not None, "call build() first"
+        return _lsh_search(
+            self.codes, self.planes, self.items, queries, k=k, n_candidates=n_candidates
+        )

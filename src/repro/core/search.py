@@ -1,0 +1,178 @@
+"""Batched graph-walk search (paper Algorithm 1), TPU-native.
+
+The CPU reference implementation walks one query at a time with a priority
+queue and a hash-set visited list.  Here B queries advance in lock-step inside
+a single ``lax.while_loop``; every per-step operation is a dense gather,
+matmul or top-k, so the walk lowers to MXU/VPU work and shards with pjit.
+
+Per-query state:
+  pool    — fixed-size candidate pool (ids, scores, checked), kept sorted by
+            score descending (paper's candidate pool C with size l).
+  visited — append-only ring buffer of every id that has been scored.  Dedup
+            is a vectorized id-equality mask against this buffer; because each
+            step appends exactly M slots for every query, the write offset is
+            a *scalar* (seeds + step*M) and the append is a single
+            dynamic_update_slice.
+  evals   — number of similarity evaluations (the paper's Fig-5/8a metric).
+
+Termination matches Algorithm 1: a query is done when every entry of its pool
+is checked; the loop exits when all queries are done or ``max_steps`` is hit.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import GraphIndex
+from repro.core.similarity import gather_scores
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+class SearchResult(NamedTuple):
+    ids: jax.Array      # [B, k] int32, -1 padded
+    scores: jax.Array   # [B, k] fp32
+    evals: jax.Array    # [B] int32 similarity-evaluation counts
+    steps: jax.Array    # [] int32 loop iterations executed
+    visited: jax.Array  # [B, V] int32 every scored id (-1 padded), Fig-5 data
+
+
+class _State(NamedTuple):
+    pool_ids: jax.Array      # [B, L]
+    pool_scores: jax.Array   # [B, L]
+    pool_checked: jax.Array  # [B, L] bool
+    visited: jax.Array       # [B, V]
+    evals: jax.Array         # [B]
+    done: jax.Array          # [B] bool
+    step: jax.Array          # []
+
+
+def _dedup_ids(ids: jax.Array) -> jax.Array:
+    """Replace duplicate ids within each row by -1 (keeps first occurrence
+    in sorted order; order does not matter for seeding)."""
+    s = jnp.sort(ids, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(s[..., :1], dtype=bool), s[..., 1:] == s[..., :-1]],
+        axis=-1,
+    )
+    return jnp.where(dup, -1, s)
+
+
+def beam_search(
+    graph: GraphIndex,
+    queries: jax.Array,
+    init_ids: jax.Array,
+    *,
+    pool_size: int,
+    max_steps: int,
+    k: int,
+    score_fn=gather_scores,
+) -> SearchResult:
+    """Run the batched walk.
+
+    graph:    GraphIndex over [N, d] items with [N, M] adjacency.
+    queries:  [B, d].
+    init_ids: [B, S] int32 seed ids (-1 padded, duplicates allowed).  For
+              plain ip-NSW this is the entry vertex; for ip-NSW+ it is the
+              ip-graph neighborhood of the angular search results (Alg 3).
+    """
+    adj, items = graph.adj, graph.items
+    B, S = init_ids.shape
+    M = adj.shape[1]
+    L = pool_size
+    V = S + max_steps * M  # visited capacity — exact, no clipping needed
+
+    init_ids = _dedup_ids(init_ids)
+    valid0 = init_ids >= 0
+    scores0 = jnp.where(valid0, score_fn(queries, items, init_ids), NEG_INF)
+    evals0 = valid0.sum(axis=-1).astype(jnp.int32)
+
+    #
+
+    # Seed pool = top-L of the seeds (sorted desc; empty slots are checked).
+    top0, idx0 = jax.lax.top_k(scores0, min(L, S))
+    ids0 = jnp.take_along_axis(init_ids, idx0, axis=-1)
+    pad = L - ids0.shape[1]
+    if pad > 0:
+        ids0 = jnp.pad(ids0, ((0, 0), (0, pad)), constant_values=-1)
+        top0 = jnp.pad(top0, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+    pool_ids = ids0.astype(jnp.int32)
+    pool_scores = top0.astype(jnp.float32)
+    pool_checked = pool_ids < 0  # empty slots can never be selected
+
+    visited = jnp.full((B, V), -1, jnp.int32)
+    visited = jax.lax.dynamic_update_slice(visited, init_ids.astype(jnp.int32), (0, 0))
+
+    state = _State(
+        pool_ids=pool_ids,
+        pool_scores=pool_scores,
+        pool_checked=pool_checked,
+        visited=visited,
+        evals=evals0,
+        done=jnp.zeros((B,), bool),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+    rows = jnp.arange(B)
+
+    def cond(st: _State):
+        return (st.step < max_steps) & jnp.any(~st.done)
+
+    def body(st: _State) -> _State:
+        unchecked = (~st.pool_checked) & (st.pool_ids >= 0)
+        has_unchecked = unchecked.any(axis=-1)
+        done = st.done | ~has_unchecked
+        upd = ~done  # queries that take a step this iteration
+
+        # Pool is sorted desc => first unchecked slot is the best unchecked.
+        cur_slot = jnp.argmax(unchecked, axis=-1)
+        cur_id = st.pool_ids[rows, cur_slot]
+        cur_id = jnp.where(upd, cur_id, graph.entry)
+
+        checked = st.pool_checked | (
+            jax.nn.one_hot(cur_slot, L, dtype=bool) & upd[:, None]
+        )
+
+        nbrs = adj[jnp.maximum(cur_id, 0)]  # [B, M]
+        valid = (nbrs >= 0) & upd[:, None]
+        seen = (nbrs[:, :, None] == st.visited[:, None, :]).any(axis=-1)
+        valid &= ~seen
+
+        nbr_scores = score_fn(queries, items, nbrs)
+        nbr_scores = jnp.where(valid, nbr_scores, NEG_INF)
+        nbr_ids = jnp.where(valid, nbrs, -1).astype(jnp.int32)
+        evals = st.evals + valid.sum(axis=-1).astype(jnp.int32)
+
+        visited = jax.lax.dynamic_update_slice(
+            st.visited, nbr_ids, (0, S + st.step * M)
+        )
+
+        cand_ids = jnp.concatenate([st.pool_ids, nbr_ids], axis=-1)
+        cand_scores = jnp.concatenate([st.pool_scores, nbr_scores], axis=-1)
+        cand_checked = jnp.concatenate([checked, ~valid], axis=-1)
+
+        new_scores, sel = jax.lax.top_k(cand_scores, L)
+        new_ids = jnp.take_along_axis(cand_ids, sel, axis=-1)
+        new_checked = jnp.take_along_axis(cand_checked, sel, axis=-1)
+
+        return _State(
+            pool_ids=new_ids,
+            pool_scores=new_scores,
+            pool_checked=new_checked,
+            visited=visited,
+            evals=evals,
+            done=done,
+            step=st.step + 1,
+        )
+
+    final = jax.lax.while_loop(cond, body, state)
+
+    return SearchResult(
+        ids=final.pool_ids[:, :k],
+        scores=final.pool_scores[:, :k],
+        evals=final.evals,
+        steps=final.step,
+        visited=final.visited,
+    )

@@ -1,0 +1,75 @@
+"""Similarity functions for proximity-graph construction and search.
+
+The paper uses two similarities:
+  * inner product        s(x, y) = x . y                  (the MIPS objective)
+  * angular similarity   s_a(x, y) = x . y / (|x| |y|)    (footnote 5: monotone
+                                                           proxy for true angle)
+
+Implementation note (TPU adaptation): angular search over a dataset is
+identical to inner-product search over the *unit-normalized* dataset — for a
+fixed query q, q.x/|x| is monotone in q.x_hat.  We therefore keep ONE batched
+search engine (inner product) and materialize a normalized copy of the items
+for the angular graph.  This keeps every hot loop a plain matmul/gather-dot.
+"""
+from __future__ import annotations
+
+import enum
+
+import jax
+import jax.numpy as jnp
+
+
+class Similarity(enum.Enum):
+    INNER_PRODUCT = "ip"
+    ANGULAR = "angular"
+    NEG_L2 = "neg_l2"
+
+
+def normalize(x: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Unit-normalize rows of ``x``."""
+    n = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return x / jnp.maximum(n, eps)
+
+
+def prepare_items(items: jax.Array, sim: Similarity) -> jax.Array:
+    """Pre-transform the item matrix so that batched inner product implements
+    the requested similarity ranking."""
+    if sim == Similarity.INNER_PRODUCT:
+        return items
+    if sim == Similarity.ANGULAR:
+        return normalize(items)
+    if sim == Similarity.NEG_L2:
+        # -|x-q|^2 = 2 q.x - |x|^2 - |q|^2 ; augment items with -|x|^2/2 and
+        # queries with a constant 1 column (done by prepare_queries).
+        sq = jnp.sum(items * items, axis=-1, keepdims=True)
+        return jnp.concatenate([items, -0.5 * sq], axis=-1)
+    raise ValueError(sim)
+
+
+def prepare_queries(queries: jax.Array, sim: Similarity) -> jax.Array:
+    if sim in (Similarity.INNER_PRODUCT, Similarity.ANGULAR):
+        return queries
+    if sim == Similarity.NEG_L2:
+        ones = jnp.ones(queries.shape[:-1] + (1,), queries.dtype)
+        return jnp.concatenate([queries, ones], axis=-1)
+    raise ValueError(sim)
+
+
+def pair_scores(queries: jax.Array, items: jax.Array) -> jax.Array:
+    """[B, d] x [N, d] -> [B, N] inner products (fp32 accumulation)."""
+    return jnp.einsum(
+        "bd,nd->bn", queries, items, preferred_element_type=jnp.float32
+    )
+
+
+def gather_scores(queries: jax.Array, items: jax.Array, ids: jax.Array) -> jax.Array:
+    """Per-query gathered inner products.
+
+    queries: [B, d]; items: [N, d]; ids: [B, W] int32 (may contain -1 padding,
+    scored against row 0 — caller masks).  Returns [B, W] fp32.
+    """
+    safe = jnp.maximum(ids, 0)
+    vecs = items[safe]  # [B, W, d]
+    return jnp.einsum(
+        "bd,bwd->bw", queries, vecs, preferred_element_type=jnp.float32
+    )

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (
+    SyntheticClickStream,
+    SyntheticLMStream,
+    mips_dataset,
+    mips_queries,
+)

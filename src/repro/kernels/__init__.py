@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the MIPS hot spots (validated with interpret=True
+on CPU; TPU is the compile target).
+
+  mips_topk    — tiled exact-MIPS linear scan + streaming top-k (MXU)
+  gather_score — scalar-prefetch fused row-gather + dot (beam expansion)
+  topk_merge   — in-VMEM candidate-pool merge (Algorithm 1 line 7-8)
+"""

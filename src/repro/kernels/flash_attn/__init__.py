@@ -1,0 +1,5 @@
+from repro.kernels.flash_attn.ops import flash_attention
+from repro.kernels.flash_attn.kernel import flash_attention_head
+from repro.kernels.flash_attn.ref import flash_attention_head_ref
+
+__all__ = ["flash_attention", "flash_attention_head", "flash_attention_head_ref"]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the flash_attn kernel (single head)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_head_ref(q, k, v, *, q_offset: int = 0, window=None):
+    s, hd = q.shape
+    t = k.shape[0]
+    logits = (q @ k.T).astype(jnp.float32) / hd**0.5
+    qi = q_offset + jnp.arange(s)[:, None]
+    ki = jnp.arange(t)[None, :]
+    ok = ki <= qi
+    if window is not None:
+        ok &= ki > qi - window
+    logits = jnp.where(ok, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(ok.any(axis=-1, keepdims=True), p, 0.0)
+    return (p.astype(v.dtype) @ v).astype(v.dtype)

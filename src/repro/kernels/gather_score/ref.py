@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for gather_score (mirrors similarity.gather_scores with
+pre-clamped ids)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_score_ref(queries: jax.Array, items: jax.Array, ids: jax.Array):
+    vecs = items[ids]  # [B, W, d]
+    return jnp.einsum(
+        "bd,bwd->bw", queries, vecs, preferred_element_type=jnp.float32
+    )

@@ -1,0 +1,64 @@
+"""jit'd public wrapper for mips_topk: pads (B, N, d) to tile multiples,
+masks padded item rows, strips query padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mips_topk.kernel import _mips_topk_kernel, NEG_INF
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "bq", "bn", "interpret")
+)
+def mips_topk(
+    queries: jax.Array,
+    items: jax.Array,
+    *,
+    k: int = 10,
+    bq: int = 128,
+    bn: int = 512,
+    interpret: bool = True,
+):
+    """Exact top-k MIPS.  queries [B, d], items [N, d] (any shapes)."""
+    b, d = queries.shape
+    n = items.shape[0]
+    bq = min(bq, _round_up(b, 8))
+    bn = min(bn, _round_up(n, 128))
+
+    bp, np_, dp = _round_up(b, bq), _round_up(n, bn), _round_up(d, 128)
+    q = jnp.pad(queries.astype(jnp.float32), ((0, bp - b), (0, dp - d)))
+    x = jnp.pad(items.astype(jnp.float32), ((0, np_ - n), (0, dp - d)))
+
+    grid = (bp // bq, np_ // bn)
+    kernel = functools.partial(_mips_topk_kernel, k=k, bn=bn, n_items=n)
+    scores, ids = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, dp), lambda i, j: (j, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bq, k), jnp.float32),
+            pltpu.VMEM((bq, k), jnp.int32),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((bp, k), jnp.float32),
+            jax.ShapeDtypeStruct((bp, k), jnp.int32),
+        ),
+        interpret=interpret,
+    )(q, x)
+    return scores[:b], ids[:b]

@@ -1,0 +1,69 @@
+"""Two-pool top-k merge Pallas TPU kernel — the candidate-pool update of
+Algorithm 1 (line 7-8: sort C, resize to l) without an HBM round-trip.
+
+Merges the current pool (L sorted slots) with the M freshly-scored neighbors
+per query, carrying two payloads (id, checked-flag), entirely in VMEM.
+Selection is the same L-pass masked-max network as mips_topk (static unroll,
+no sort/gather primitives — lowers to VPU compare/select trees on TPU).
+
+grid = (B/bb,): one query tile per step; everything fits VMEM
+  (bb * (2L + 2(L+M)) * 4 bytes ≈ 100 KB for bb=128, L=64, M=16).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _merge_kernel(
+    ps_ref, pi_ref, pc_ref, ns_ref, ni_ref, nc_ref, os_ref, oi_ref, oc_ref, *, l: int
+):
+    cand_s = jnp.concatenate([ps_ref[...], ns_ref[...]], axis=1)
+    cand_i = jnp.concatenate([pi_ref[...], ni_ref[...]], axis=1)
+    cand_c = jnp.concatenate([pc_ref[...], nc_ref[...]], axis=1)
+
+    col = jax.lax.broadcasted_iota(jnp.int32, cand_s.shape, 1)
+    out_s, out_i, out_c = [], [], []
+    for _ in range(l):
+        m = jnp.max(cand_s, axis=1)
+        amax = jnp.argmax(cand_s, axis=1)
+        hit = col == amax[:, None]
+        out_s.append(m)
+        out_i.append(jnp.max(jnp.where(hit, cand_i, -1), axis=1))
+        out_c.append(jnp.max(jnp.where(hit, cand_c, 0), axis=1))
+        cand_s = jnp.where(hit, NEG_INF, cand_s)
+    os_ref[...] = jnp.stack(out_s, axis=1)
+    oi_ref[...] = jnp.stack(out_i, axis=1)
+    oc_ref[...] = jnp.stack(out_c, axis=1)
+
+
+def topk_merge_pallas(
+    pool_s, pool_i, pool_c, new_s, new_i, new_c, *, bb: int = 128, interpret: bool = True
+):
+    """pool_*: [B, L] (fp32 / int32 / int32 0-1 flag); new_*: [B, M].
+    Returns merged top-L (scores, ids, checked) by descending score."""
+    b, l = pool_s.shape
+    m = new_s.shape[1]
+    assert b % bb == 0 or b < bb, (b, bb)
+    bb = min(bb, b)
+    grid = (b // bb,)
+    kernel = functools.partial(_merge_kernel, l=l)
+    specs_pool = pl.BlockSpec((bb, l), lambda i: (i, 0))
+    specs_new = pl.BlockSpec((bb, m), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[specs_pool, specs_pool, specs_pool, specs_new, specs_new, specs_new],
+        out_specs=(specs_pool, specs_pool, specs_pool),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, l), jnp.float32),
+            jax.ShapeDtypeStruct((b, l), jnp.int32),
+            jax.ShapeDtypeStruct((b, l), jnp.int32),
+        ),
+        interpret=interpret,
+    )(pool_s, pool_i, pool_c, new_s, new_i, new_c)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for topk_merge (matches the jnp pool update used in
+search.beam_search: concat + top_k + take_along_axis)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_merge_ref(pool_s, pool_i, pool_c, new_s, new_i, new_c):
+    cand_s = jnp.concatenate([pool_s, new_s], axis=1)
+    cand_i = jnp.concatenate([pool_i, new_i], axis=1)
+    cand_c = jnp.concatenate([pool_c, new_c], axis=1)
+    l = pool_s.shape[1]
+    vals, sel = jax.lax.top_k(cand_s, l)
+    return (
+        vals,
+        jnp.take_along_axis(cand_i, sel, axis=1),
+        jnp.take_along_axis(cand_c, sel, axis=1),
+    )

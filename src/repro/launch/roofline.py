@@ -1,0 +1,443 @@
+"""Roofline analysis from the compiled dry-run artifacts.
+
+Why not just ``compiled.cost_analysis()``: XLA's flat cost analysis counts a
+while-loop body ONCE, so scan-over-layers models under-report by ~n_layers.
+This module re-derives loop-aware totals from the optimized HLO text:
+
+  1. parse every computation + its top-level ops;
+  2. recover while trip counts from the loop-condition's compare constant;
+  3. propagate multipliers through the call graph (while bodies x trip count,
+     fusions/calls x caller);
+  4. FLOPs   — from dot ops' shapes x contracting dims (matmuls dominate all
+     ten architectures; elementwise flops are ignored, consistent with the
+     6*N*D convention);
+  5. bytes   — sum of (result + operand) sizes of top-level ops (post-fusion
+     HLO materializes exactly these buffers to HBM; fusion internals are
+     fused away);
+  6. wire    — collective result bytes x ring factors (2x for all-reduce).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI/link.
+All quantities are PER DEVICE (the compiled module is the per-device SPMD
+program), so terms are seconds-per-step on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import gzip
+import json
+import os
+import re
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# computation headers may have tuple-typed params (nested parens) — match
+# only the leading name.
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_OP_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s+=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+([\w\-]+)\("
+)
+_CALL_ATTR = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+
+WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+_CONTROL_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while", "call",
+    "conditional", "custom-call", "copy-start", "copy-done",
+}
+
+
+def _shape_dims(type_str: str):
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x]
+        out.append((dtype, d))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    kind: str
+    line: str
+
+    def operand_names(self) -> List[str]:
+        """Names referenced inside the op's argument parens (optimized HLO
+        prints operands without types)."""
+        i = self.line.index("(")
+        depth = 0
+        j = i
+        for j in range(i, len(self.line)):
+            if self.line[j] == "(":
+                depth += 1
+            elif self.line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        inside = self.line[i + 1 : j]
+        return re.findall(r"%([\w\.\-]+)", inside)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    calls: List[str]
+    while_pairs: List[tuple]  # (cond_name, body_name)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if (
+            line
+            and not line[0].isspace()
+            and line.rstrip().endswith("{")
+            and "(" in line
+        ):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), [], [], [])
+                comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rtype, kind = m.groups()
+        op = Op(name, rtype, kind, line)
+        cur.ops.append(op)
+        if kind == "while":
+            w = _WHILE_RE.search(line)
+            if w:
+                cur.while_pairs.append((w.group(1), w.group(2)))
+        for callee in _CALL_ATTR.findall(line):
+            cur.calls.append(callee)
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition — the standard XLA
+    counted-loop pattern compares the induction variable against it."""
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.search(r"constant\((\d+)\)", op.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Execution count per computation, ENTRY = 1; while bodies multiply by
+    trip count; everything else inherits the caller's count."""
+    entry = None
+    for name in comps:
+        # ENTRY computation is the one nobody calls
+        entry = name
+    called = set()
+    for c in comps.values():
+        called.update(c.calls)
+    roots = [n for n in comps if n not in called]
+    mult: Dict[str, float] = {n: 0.0 for n in comps}
+
+    def visit(name: str, m: float, depth=0):
+        if name not in comps or depth > 50:
+            return
+        mult[name] += m
+        c = comps[name]
+        wb = {b: cn for cn, b in c.while_pairs}
+        wc = {cn for cn, _ in c.while_pairs}
+        seen = set()
+        for callee in c.calls:
+            if callee in seen:
+                continue
+            seen.add(callee)
+            if callee in wb:  # while body: multiply by trip count
+                tc = _trip_count(comps[wb[callee]]) if wb[callee] in comps else 1
+                visit(callee, m * max(tc, 1), depth + 1)
+            elif callee in wc:  # condition: runs tc+1 times; negligible
+                visit(callee, m, depth + 1)
+            else:
+                visit(callee, m, depth + 1)
+
+    for r in roots:
+        visit(r, 1.0)
+    return mult
+
+
+_DOT_DIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _dot_flops(op: Op, table: Dict[str, str]) -> float:
+    """2 x prod(result dims) x prod(contracted dims of lhs)."""
+    res = _shape_dims(op.result_type)
+    if not res:
+        return 0.0
+    out_elems = 1
+    for d in res[0][1]:
+        out_elems *= d
+    m = _DOT_DIMS.search(op.line)
+    names = op.operand_names()
+    if not m or not names:
+        return 0.0
+    lhs_type = table.get(names[0], "")
+    lhs = _shape_dims(lhs_type)
+    if not lhs:
+        return 0.0
+    lhs_dims = lhs[0][1]
+    k = 1
+    for idx in (int(x) for x in m.group(1).split(",") if x):
+        if idx < len(lhs_dims):
+            k *= lhs_dims[idx]
+    return 2.0 * out_elems * k
+
+
+def analyze_hlo(text: str) -> dict:
+    comps = parse_module(text)
+    mult = _multipliers(comps)
+
+    flops = 0.0
+    bytes_hbm = 0.0
+    wire = 0.0
+    coll_by_kind: Dict[str, float] = {}
+    coll_f32_promoted_total = [0.0]
+    fusion_names = {
+        c for c in comps if c.startswith("fused") or "fused_computation" in c
+        or c.startswith("wrapped_")
+    }
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        table = {op.name: op.result_type for op in comp.ops}
+        in_fusion = cname in fusion_names
+        for op in comp.ops:
+            base_kind = op.kind.replace("-start", "").replace("-done", "")
+            if op.kind == "dot":
+                flops += m * _dot_flops(op, table)
+            if in_fusion:
+                continue  # fusion internals don't touch HBM
+            if base_kind in WIRE_FACTOR:
+                if op.kind.endswith("-done"):
+                    continue
+                b = _shape_bytes(op.result_type)
+                if base_kind == "reduce-scatter":
+                    # wire ~= reduced operand, not the scattered result
+                    names = op.operand_names()
+                    b = sum(
+                        _shape_bytes(table[nm]) for nm in names if nm in table
+                    ) or b
+                # TPU model correction: XLA:CPU's float-normalization pass
+                # promotes bf16 collectives to f32 (CPU has no native bf16
+                # reductions) — visible as convert fusions feeding every
+                # large AR.  The TPU backend executes them in bf16.  All
+                # large activation/gradient collectives in this codebase
+                # are bf16 by construction (params/activations bf16; the
+                # only true-f32 reductions are scalar losses/stats), so
+                # large f32 payloads are halved.  Raw bytes are kept in
+                # f32_promoted_bytes for transparency.
+                raw = b
+                if "f32[" in op.result_type and b > (1 << 22):
+                    b = b // 2
+                    wire_f32_promoted = raw - b
+                else:
+                    wire_f32_promoted = 0
+                coll_f32_promoted = coll_f32_promoted_total[0] = (
+                    coll_f32_promoted_total[0] + m * wire_f32_promoted
+                )
+                wire += m * b * WIRE_FACTOR[base_kind]
+                coll_by_kind[base_kind] = coll_by_kind.get(base_kind, 0.0) + m * b
+                bytes_hbm += m * b
+                continue
+            if op.kind in _CONTROL_OPS:
+                if op.kind == "custom-call":
+                    bytes_hbm += m * _shape_bytes(op.result_type)
+                continue
+            # HBM traffic estimate per op kind.  Index-driven ops touch only
+            # the selected region, NOT their full operand (a dynamic-slice of
+            # the stacked layer weights inside a scan must not count the
+            # whole stack every iteration).
+            res_b = _shape_bytes(op.result_type)
+            if op.kind in ("dynamic-slice", "slice", "gather", "broadcast",
+                           "reshape", "transpose", "copy", "convert",
+                           "concatenate", "reverse", "pad"):
+                bytes_hbm += m * 2 * res_b
+            elif op.kind in ("dynamic-update-slice", "scatter"):
+                names = op.operand_names()
+                upd_idx = 1 if op.kind == "dynamic-update-slice" else 2
+                upd = (
+                    _shape_bytes(table[names[upd_idx]])
+                    if len(names) > upd_idx and names[upd_idx] in table
+                    else res_b
+                )
+                bytes_hbm += m * 2 * upd
+            else:
+                opnd = sum(
+                    _shape_bytes(table[nm])
+                    for nm in op.operand_names()
+                    if nm in table
+                )
+                bytes_hbm += m * (res_b + opnd)
+
+    return dict(
+        flops=flops,
+        bytes=bytes_hbm,
+        wire_bytes=wire,
+        f32_promoted_bytes=coll_f32_promoted_total[0],
+        coll_by_kind=coll_by_kind,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_hbm / HBM_BW,
+        collective_s=wire / LINK_BW,
+    )
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS per cell (the "useful work" yardstick)
+# ---------------------------------------------------------------------------
+
+
+def model_flops(meta: dict, n_devices: int) -> float:
+    fam = meta["family"]
+    if fam == "lm":
+        n = meta["active_params"]
+        d = meta["tokens"]
+        mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[meta["kind"]]
+        return mult * n * d / n_devices
+    if fam == "gnn":
+        h = meta["d_hidden"]
+        e, nn, L = meta["n_edges"], meta["n_nodes"], meta["n_layers"]
+        per_edge = 2 * (3 * h * h + h * h + h * h)   # edge MLP [3h->h->h->h]
+        per_node = 2 * (2 * h * h + h * h + h * h)   # node MLP [2h->h->h->h]
+        fwd = L * (e * per_edge + nn * per_node)
+        return 3.0 * fwd / n_devices                  # train: fwd + 2x bwd
+    # recsys — MLP/attention flops per sample (embedding gathers are bytes,
+    # not flops)
+    b = meta["batch"]
+    per_sample = {
+        "dlrm-rm2": 2 * (13 * 512 + 512 * 256 + 256 * 64 + 415 * 512 + 512 * 512 + 512 * 256 + 256),
+        "sasrec": 2 * (2 * (3 * 50 * 50 + 2 * 50 * 50) * 50 + 2 * 50 * 50 * 50),
+        "mind": 2 * (50 * 64 * 64 * 3),
+        "dien": 2 * (100 * (3 * (18 * 108 + 108 * 108) + 3 * (108 * 108 * 2)) + 126 * 200 + 200 * 80),
+    }[meta["arch"]]
+    mult = 3.0 if meta["kind"] == "train" else 1.0
+    if meta["kind"] == "retrieval":
+        per_sample += 2 * meta["n_cand"] * 64
+    return mult * b * per_sample / n_devices
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def analyze_record(json_path: str) -> dict:
+    with open(json_path) as f:
+        rec = json.load(f)
+    hlo_path = json_path.replace(".json", ".hlo.txt.gz")
+    terms = {}
+    if os.path.exists(hlo_path):
+        with gzip.open(hlo_path, "rt") as f:
+            terms = analyze_hlo(f.read())
+    mf = model_flops(rec["meta"], rec["n_devices"])
+    out = dict(
+        cell=rec["cell"],
+        mesh=rec["mesh"],
+        n_devices=rec["n_devices"],
+        model_flops_per_dev=mf,
+        hlo_flops_flat=rec["cost"].get("flops", 0.0),
+        **terms,
+    )
+    if terms:
+        out["useful_ratio"] = mf / max(terms["flops"], 1.0)
+        dom = max(
+            ("compute", terms["compute_s"]),
+            ("memory", terms["memory_s"]),
+            ("collective", terms["collective_s"]),
+            key=lambda kv: kv[1],
+        )
+        out["dominant"] = dom[0]
+        out["step_s_bound"] = dom[1]
+        denom = max(terms["compute_s"], terms["memory_s"], terms["collective_s"], 1e-30)
+        out["roofline_fraction"] = (mf / PEAK_FLOPS) / denom
+    mem = rec.get("memory", {})
+    if "peak_bytes_per_device" in mem:
+        out["mem_gib_per_dev"] = round(mem["peak_bytes_per_device"] / 2**30, 2)
+    return out
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.json")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    args = ap.parse_args()
+
+    rows = []
+    for p in sorted(glob.glob(os.path.join(args.dryrun_dir, "*.json"))):
+        if args.mesh == "single" and "__multi" in p:
+            continue
+        if args.mesh == "multi" and "__single" in p:
+            continue
+        try:
+            rows.append(analyze_record(p))
+        except Exception as e:  # noqa
+            rows.append(dict(cell=os.path.basename(p), error=repr(e)))
+
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+
+    hdr = f"{'cell':42s} {'mesh':8s} {'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} {'dom':>10s} {'roofline%':>9s} {'GiB/dev':>8s}"
+    print(hdr)
+    for r in rows:
+        if "error" in r:
+            print(f"{r['cell']:42s} ERROR {r['error']}")
+            continue
+        print(
+            f"{r['cell']:42s} {r['mesh']:8s} "
+            f"{r.get('compute_s', float('nan')):10.3e} "
+            f"{r.get('memory_s', float('nan')):10.3e} "
+            f"{r.get('collective_s', float('nan')):10.3e} "
+            f"{r.get('dominant', '?'):>10s} "
+            f"{100*r.get('roofline_fraction', 0):8.1f}% "
+            f"{r.get('mem_gib_per_dev', float('nan')):8.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Assigned-architecture substrate: LM transformers (dense/MoE/sliding),
+MeshGraphNet GNN, and recsys towers."""

@@ -1,0 +1,435 @@
+"""Transformer substrate layers — pure-functional (params are plain pytrees,
+shardings are parallel pytrees of PartitionSpec built by ``specs_*`` helpers).
+
+Conventions
+  * params: nested dicts of jnp arrays; a layer's init returns (params, specs)
+    where specs mirrors params with jax.sharding.PartitionSpec leaves.
+  * mesh logical axes: "pod" x "data" (batch), "model" (tensor/expert).
+  * compute dtype bf16, params stored bf16 (master-weightless; moments fp32 in
+    the optimizer), fp32 for norms/softmax accumulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+
+# The batch ("data-parallel") axes depend on the mesh: ("pod", "data") on the
+# multi-pod mesh, ("data",) on a single pod.  launch code sets this before
+# tracing; the sentinel string "batch" in shard() calls resolves against it.
+_BATCH_AXES = ("pod", "data")
+
+
+def set_batch_axes(axes) -> None:
+    global _BATCH_AXES
+    _BATCH_AXES = tuple(axes)
+
+
+def batch_axes() -> tuple:
+    return _BATCH_AXES
+
+
+def set_batch_axes_for_mesh(mesh) -> None:
+    set_batch_axes(tuple(a for a in mesh.axis_names if a != MODEL_AXIS))
+
+
+def shard(x: jax.Array, *spec) -> jax.Array:
+    """Activation sharding hint (no-op outside a mesh context).  The string
+    "batch" resolves to the current batch axes.  In pure-FSDP mode (the
+    "model" axis itself carries batch — §Perf iteration 3 for dense-LM
+    training), standalone "model" constraints become None: there is no
+    tensor-parallel activation axis."""
+    fsdp = MODEL_AXIS in _BATCH_AXES
+    resolved = []
+    for s in spec:
+        if s == "batch":
+            resolved.append(_BATCH_AXES)
+        elif fsdp and (s == MODEL_AXIS or (isinstance(s, tuple) and MODEL_AXIS in s)):
+            resolved.append(None)
+        else:
+            resolved.append(s)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*resolved))
+    except (ValueError, RuntimeError, TypeError, NameError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16):
+    return jnp.ones((d,), dtype), P(None)
+
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-6) -> jax.Array:
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * g.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq  # [..,S,1,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (full / sliding-window causal), train + prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def attention_specs():
+    # 2D sharding: q heads + output-proj head axis are tensor-parallel
+    # ("model"); the d_model dim is FSDP-sharded over "data" for storage
+    # (GSPMD all-gathers just-in-time).  kv projections are small
+    # (n_kv <= 8 < model parallelism): d over "data" only.
+    return {
+        "wq": P("data", MODEL_AXIS, None),
+        "wk": P("data", None, None),
+        "wv": P("data", None, None),
+        "wo": P(MODEL_AXIS, None, "data"),
+    }
+
+
+def attention_init(key, d_model, n_heads, n_kv, head_dim, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": _dense_init(ks[0], (d_model, n_heads, head_dim), dtype),
+        "wk": _dense_init(ks[1], (d_model, n_kv, head_dim), dtype),
+        "wv": _dense_init(ks[2], (d_model, n_kv, head_dim), dtype),
+        "wo": _dense_init(ks[3], (n_heads, head_dim, d_model), dtype),
+    }
+    return params, attention_specs()
+
+
+def _attend_block(qg, k, v, q_pos, k_pos, window: Optional[int]):
+    """One (q-chunk x full-kv) attention block with masking.
+
+    qg: [B, c, KV, G, hd]; k, v: [B, T, KV, hd]; q_pos: [c] absolute query
+    positions; k_pos: [T] absolute key positions (-1 = invalid slot).
+    """
+    hd = qg.shape[-1]
+    logits = jnp.einsum(
+        "bsngh,btnh->bngst", qg, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(hd).astype(jnp.float32)
+    m = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] >= 0)
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    logits = jnp.where(m[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bngst,btnh->bsngh", probs, v)
+
+
+NEG_BIG = jnp.float32(-1e30)  # finite mask value (keeps flash stats NaN-free)
+
+
+def _flash_mask(kp, q_pos, window):
+    msk = (kp[None, :] <= q_pos[:, None]) & (kp[None, :] >= 0)
+    if window is not None:
+        msk &= kp[None, :] > q_pos[:, None] - window
+    return msk
+
+
+def _flash_bias(kp, q_pos, window):
+    """Additive [c, ck] mask bias — a rank-2 add fuses into the logits
+    matmul epilogue; a rank-6 jnp.where materializes a 100MB pred tensor
+    per tile (§Perf iteration 4)."""
+    return jnp.where(_flash_mask(kp, q_pos, window), 0.0, NEG_BIG).astype(
+        jnp.float32
+    )
+
+
+def _flash_fwd_scan(qg, k, v, q_pos, k_pos, window, kv_chunk):
+    """Returns (out [B,KV,G,c,hd] fp32, m, l) — m/l are the per-row softmax
+    stats the backward recomputes tiles from."""
+    b, c, kvh, g, hd = qg.shape
+    t = k.shape[1]
+    n = t // kv_chunk
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    kc = jnp.moveaxis(k.reshape(b, n, kv_chunk, kvh, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n, kv_chunk, kvh, hd), 1, 0)
+    pc = k_pos.reshape(n, kv_chunk)
+
+    m0 = jnp.full((b, kvh, g, c), NEG_BIG, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, c), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, c, hd), jnp.float32)
+
+    def body(carry, args):
+        m, l, acc = carry
+        kb, vb, kp = args
+        logits = jnp.einsum(
+            "bsngh,btnh->bngst", qg, kb, preferred_element_type=jnp.float32
+        ) * scale                                            # [B,KV,G,c,ck]
+        logits = logits + _flash_bias(kp, q_pos, window)[None, None, None]
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bngst,btnh->bngsh", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out, m, l
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _attend_flash(qg, k, v, q_pos, k_pos, window: Optional[int], kv_chunk: int):
+    """Online-softmax (flash) attention — §Perf centerpiece for the LM cells:
+    the [c, T] fp32 score matrix never materializes beyond a [c, kv_chunk]
+    tile, and the CUSTOM BACKWARD recomputes tiles from the saved (m, l)
+    softmax stats (FlashAttention backward) instead of letting scan-AD store
+    per-chunk fp32 accumulators.
+
+    qg: [B, c, KV, G, hd]; k, v: [B, T, KV, hd]; T % kv_chunk == 0.
+    Returns [B, c, KV, G, hd] in v.dtype.
+    """
+    out, _, _ = _flash_fwd_scan(qg, k, v, q_pos, k_pos, window, kv_chunk)
+    return jnp.moveaxis(out, 3, 1).astype(v.dtype)
+
+
+def _attend_flash_fwd(qg, k, v, q_pos, k_pos, window, kv_chunk):
+    out, m, l = _flash_fwd_scan(qg, k, v, q_pos, k_pos, window, kv_chunk)
+    primal = jnp.moveaxis(out, 3, 1).astype(v.dtype)
+    return primal, (qg, k, v, q_pos, k_pos, out, m, l)
+
+
+def _attend_flash_bwd(window, kv_chunk, res, dout):
+    qg, k, v, q_pos, k_pos, out, m, l = res
+    b, c, kvh, g, hd = qg.shape
+    t = k.shape[1]
+    n = t // kv_chunk
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    do = jnp.moveaxis(dout.astype(jnp.float32), 1, 3)        # [B,KV,G,c,hd]
+    delta = jnp.sum(do * out, axis=-1)                       # [B,KV,G,c]
+    l_safe = jnp.maximum(l, 1e-30)
+
+    kc = jnp.moveaxis(k.reshape(b, n, kv_chunk, kvh, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n, kv_chunk, kvh, hd), 1, 0)
+    pc = k_pos.reshape(n, kv_chunk)
+
+    def body(dq, args):
+        kb, vb, kp = args
+        logits = jnp.einsum(
+            "bsngh,btnh->bngst", qg, kb, preferred_element_type=jnp.float32
+        ) * scale
+        logits = logits + _flash_bias(kp, q_pos, window)[None, None, None]
+        p = jnp.exp(logits - m[..., None]) / l_safe[..., None]  # true softmax
+        dp = jnp.einsum(
+            "bngsh,btnh->bngst", do, vb, preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - delta[..., None])                      # [B,KV,G,c,ck]
+        dq = dq + jnp.einsum(
+            "bngst,btnh->bsngh", ds.astype(kb.dtype), kb,
+            preferred_element_type=jnp.float32,
+        ) * scale
+        dkb = jnp.einsum(
+            "bngst,bsngh->btnh", ds.astype(qg.dtype), qg,
+            preferred_element_type=jnp.float32,
+        ) * scale
+        dvb = jnp.einsum(
+            "bngst,bngsh->btnh", p.astype(do.dtype), do,
+            preferred_element_type=jnp.float32,
+        )
+        return dq, (dkb, dvb)
+
+    dq0 = jnp.zeros((b, c, kvh, g, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (kc, vc, pc))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(b, t, kvh, hd).astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(b, t, kvh, hd).astype(v.dtype)
+    f0 = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return (dq.astype(qg.dtype), dk, dv, f0(q_pos), f0(k_pos))
+
+
+_attend_flash.defvjp(_attend_flash_fwd, _attend_flash_bwd)
+
+
+def attention(
+    params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    n_kv: int,
+    window: Optional[int] = None,
+    kv_cache: Optional[tuple] = None,
+    q_offset=0,
+    rope_theta: float = 10000.0,
+    chunk: int = 512,
+    flash: bool = True,
+    kv_chunk: int = 1024,
+):
+    """x: [B, S, d].  Returns (out [B, S, d], new_kv (k, v)).
+
+    Train / prefill: ``kv_cache=None``; queries are chunked (flash-style —
+    the [S, S] score matrix never materializes beyond [chunk, S]).
+
+    Decode: ``kv_cache=(k, v)`` with shape [B, T, n_kv, hd]; S must be 1;
+    ``q_offset`` is the absolute position of the new token.  If T is smaller
+    than the context (sliding-window layers), the cache is a RING buffer:
+    the token is written at slot ``q_offset % T`` and slot s holds absolute
+    position ``q_offset - ((q_offset - s) mod T)``.
+    """
+    b, s, _ = x.shape
+    h, hd = params["wq"].shape[1:]
+    g = h // n_kv
+
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+    q = shard(q, "batch", None, MODEL_AXIS, None)
+    if kv_cache is None and s > 1:
+        # §Perf (hypothesis H3): under sequence parallelism k/v would stay
+        # seq-sharded over "model", turning every attention chunk into a
+        # partial-softmax all-reduce.  Gathering k/v ONCE per layer (n_kv is
+        # small) replaces ~2*n_chunks fp32 all-reduces with one bf16
+        # all-gather.
+        k = shard(k, "batch", None, None, None)
+        v = shard(v, "batch", None, None, None)
+
+    if kv_cache is not None:
+        assert s == 1, "decode path expects one token at a time"
+        ck, cv = kv_cache
+        t = ck.shape[1]
+        slot = jnp.mod(jnp.asarray(q_offset, jnp.int32), t)
+        k = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        # absolute position held by every ring slot (= identity when t covers
+        # the whole context)
+        sl = jnp.arange(t, dtype=jnp.int32)
+        k_pos = q_offset - jnp.mod(q_offset - sl, t)
+        q_pos = jnp.asarray(q_offset, jnp.int32)[None]
+        ctx = _attend_block(
+            q.reshape(b, s, n_kv, g, hd), k, v, q_pos, k_pos, window
+        )
+    else:
+        k_pos = positions.astype(jnp.int32)
+        q_all = q.reshape(b, s, n_kv, g, hd)
+        use_flash = flash and s % kv_chunk == 0 and s >= kv_chunk
+        if s > chunk and s % chunk == 0:
+            n_chunks = s // chunk
+            qc = q_all.reshape(b, n_chunks, chunk, n_kv, g, hd)
+            pc = positions.astype(jnp.int32).reshape(n_chunks, chunk)
+
+            def body(_, args):
+                qi, pi = args
+                if use_flash:
+                    return None, _attend_flash(qi, k, v, pi, k_pos, window, kv_chunk)
+                return None, _attend_block(qi, k, v, pi, k_pos, window)
+
+            _, ctx = jax.lax.scan(
+                body, None, (jnp.moveaxis(qc, 1, 0), pc)
+            )  # [n_chunks, B, chunk, KV, G, hd]
+            ctx = jnp.moveaxis(ctx, 0, 1).reshape(b, s, n_kv, g, hd)
+        elif use_flash:
+            ctx = _attend_flash(
+                q_all, k, v, positions.astype(jnp.int32), k_pos, window, kv_chunk
+            )
+        else:
+            ctx = _attend_block(q_all, k, v, positions.astype(jnp.int32), k_pos, window)
+
+    ctx = ctx.reshape(b, s, h, hd)
+    out = jnp.einsum("bsnh,nhd->bsd", ctx, params["wo"])
+    return shard(out, "batch", None, None), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs():
+    # Megatron TP on the ffn dim + FSDP storage sharding on d_model.
+    return {
+        "w_gate": P("data", MODEL_AXIS),
+        "w_in": P("data", MODEL_AXIS),
+        "w_out": P(MODEL_AXIS, "data"),
+    }
+
+
+def mlp_init(key, d_model, d_ff, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    params = {
+        "w_gate": _dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_in": _dense_init(ks[1], (d_model, d_ff), dtype),
+        "w_out": _dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+    return params, mlp_specs()
+
+
+def mlp(params, x: jax.Array) -> jax.Array:
+    gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    h = shard(h, "batch", None, MODEL_AXIS)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# Generic MLP stack (GNN / recsys substrate)
+# ---------------------------------------------------------------------------
+
+
+def dense_stack_init(key, dims, dtype=jnp.float32, final_bias=True):
+    """dims = [in, h1, ..., out]; returns list of {"w", "b"} params."""
+    layers = []
+    specs = []
+    ks = jax.random.split(key, len(dims) - 1)
+    for i in range(len(dims) - 1):
+        layers.append(
+            {
+                "w": _dense_init(ks[i], (dims[i], dims[i + 1]), dtype),
+                "b": jnp.zeros((dims[i + 1],), dtype),
+            }
+        )
+        specs.append({"w": P(None, None), "b": P(None)})
+    return layers, specs
+
+
+def dense_stack(layers, x: jax.Array, act=jax.nn.relu, final_act=False) -> jax.Array:
+    n = len(layers)
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x

@@ -1,0 +1,7 @@
+"""Recommender architectures: huge-embedding-table models whose serving
+stage is the paper's MIPS problem (ip-NSW+ integration point)."""
+from repro.models.recsys.embedding import (
+    embedding_bag,
+    embedding_bag_ragged,
+    multi_table_lookup,
+)

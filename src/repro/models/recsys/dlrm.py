@@ -1,0 +1,86 @@
+"""DLRM (Naumov et al., arXiv:1906.00091), RM2-scale config.
+
+dense [B, 13] -> bottom MLP -> [B, 64]
+sparse [B, 26] -> 26 embedding tables (row-sharded over ``model``) -> [B, 26, 64]
+dot interaction over the 27 vectors -> 351 pairwise dots + bottom copy
+top MLP -> CTR logit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_stack, dense_stack_init
+from repro.models.recsys.embedding import multi_table_lookup, table_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    n_rows: int = 1_000_000           # rows per sparse table
+    bot_mlp: tuple = (512, 256, 64)
+    top_mlp: tuple = (512, 512, 256, 1)
+    dtype: Any = jnp.float32
+
+    @property
+    def n_interact(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+
+def _init_params(key, cfg: DLRMConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    tables = (
+        jax.random.normal(k1, (cfg.n_sparse, cfg.n_rows, cfg.embed_dim), jnp.float32)
+        * cfg.n_rows**-0.25
+    ).astype(cfg.dtype)
+    bot, _ = dense_stack_init(k2, [cfg.n_dense, *cfg.bot_mlp], cfg.dtype)
+    top, _ = dense_stack_init(
+        k3, [cfg.n_interact + cfg.embed_dim, *cfg.top_mlp], cfg.dtype
+    )
+    params = {"tables": tables, "bot": bot, "top": top}
+    return params
+
+
+def init(key, cfg: DLRMConfig):
+    return _init_params(key, cfg), specs(cfg)
+
+
+def specs(cfg: DLRMConfig):
+    dummy = jax.eval_shape(lambda k: _init_params(k, cfg), jax.random.PRNGKey(0))
+    s = jax.tree.map(lambda _: P(), dummy)
+    s["tables"] = table_spec(stacked=True)
+    return s
+
+
+def forward(params, batch, cfg: DLRMConfig):
+    """batch = {dense [B, 13] f32, sparse [B, 26] int32} -> logits [B]."""
+    b = batch["dense"].shape[0]
+    bot = dense_stack(params["bot"], batch["dense"].astype(cfg.dtype), final_act=True)
+    emb = multi_table_lookup(params["tables"], batch["sparse"])  # [B, 26, d]
+    feats = jnp.concatenate([bot[:, None, :], emb], axis=1)      # [B, 27, d]
+
+    # dot interaction: lower triangle of feats @ feats^T
+    z = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    f = feats.shape[1]
+    iu, ju = jnp.tril_indices(f, k=-1)
+    inter = z[:, iu, ju]                                          # [B, 351]
+
+    top_in = jnp.concatenate([bot, inter], axis=-1)
+    logit = dense_stack(params["top"], top_in)
+    return logit[:, 0]
+
+
+def bce_loss(params, batch, cfg: DLRMConfig):
+    logits = forward(params, batch, cfg)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )

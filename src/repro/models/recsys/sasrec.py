@@ -1,0 +1,136 @@
+"""SASRec (Kang & McAuley, arXiv:1808.09781) — self-attentive sequential
+recommendation.  embed_dim=50, 2 blocks, 1 head, seq_len=50.
+
+The item tower output is a user embedding; serving is MIPS over the item
+embedding table — the ip-NSW+ integration point (`retrieval_cand`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import _dense_init
+from repro.models.recsys.embedding import table_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    n_items: int = 1_000_000
+    dropout: float = 0.0              # inference framework: no dropout
+    dtype: Any = jnp.float32
+
+
+def _init_params(key, cfg: SASRecConfig):
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 2 + cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kb = jax.random.split(ks[2 + i], 6)
+        blocks.append(
+            {
+                "wq": _dense_init(kb[0], (d, d), cfg.dtype),
+                "wk": _dense_init(kb[1], (d, d), cfg.dtype),
+                "wv": _dense_init(kb[2], (d, d), cfg.dtype),
+                "w1": _dense_init(kb[3], (d, d), cfg.dtype),
+                "w2": _dense_init(kb[4], (d, d), cfg.dtype),
+                "ln1": jnp.ones((d,), cfg.dtype),
+                "ln2": jnp.ones((d,), cfg.dtype),
+            }
+        )
+    params = {
+        "item_emb": (
+            jax.random.normal(ks[0], (cfg.n_items, d), jnp.float32) * d**-0.5
+        ).astype(cfg.dtype),
+        "pos_emb": (
+            jax.random.normal(ks[1], (cfg.seq_len, d), jnp.float32) * d**-0.5
+        ).astype(cfg.dtype),
+        "blocks": blocks,
+    }
+    return params
+
+
+def init(key, cfg: SASRecConfig):
+    return _init_params(key, cfg), specs(cfg)
+
+
+def specs(cfg: SASRecConfig):
+    dummy = jax.eval_shape(lambda k: _init_params(k, cfg), jax.random.PRNGKey(0))
+    s = jax.tree.map(lambda _: P(), dummy)
+    s["item_emb"] = table_spec()
+    return s
+
+
+def _ln(x, g, eps=1e-6):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g
+
+
+def user_tower(params, hist, cfg: SASRecConfig):
+    """hist [B, S] int32 item ids (-1 pad) -> seq repr [B, S, d]."""
+    b, s = hist.shape
+    mask = hist >= 0
+    x = jnp.take(params["item_emb"], jnp.maximum(hist, 0), axis=0)
+    x = x * cfg.embed_dim**0.5 + params["pos_emb"][None, :s]
+    x = x * mask[..., None].astype(x.dtype)
+
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    attn_mask = causal[None] & mask[:, None, :]
+
+    for blk in params["blocks"]:
+        h = _ln(x, blk["ln1"])
+        q, k, v = h @ blk["wq"], h @ blk["wk"], h @ blk["wv"]
+        logits = jnp.einsum(
+            "bsd,btd->bst", q, k, preferred_element_type=jnp.float32
+        ) / cfg.embed_dim**0.5
+        logits = jnp.where(attn_mask, logits, -jnp.inf)
+        p = jax.nn.softmax(logits, axis=-1)
+        # rows with no valid key produce NaN-free zeros
+        p = jnp.where(attn_mask.any(-1, keepdims=True), p, 0.0).astype(x.dtype)
+        x = x + jnp.einsum("bst,btd->bsd", p, v)
+        h2 = _ln(x, blk["ln2"])
+        x = x + jax.nn.relu(h2 @ blk["w1"]) @ blk["w2"]
+    return x * mask[..., None].astype(x.dtype)
+
+
+def user_embedding(params, hist, cfg: SASRecConfig):
+    """Last valid position's representation [B, d]."""
+    reps = user_tower(params, hist, cfg)
+    lengths = jnp.maximum(jnp.sum(hist >= 0, axis=1) - 1, 0)
+    return jnp.take_along_axis(reps, lengths[:, None, None], axis=1)[:, 0]
+
+
+def sampled_softmax_loss(params, batch, cfg: SASRecConfig):
+    """batch = {hist [B, S], pos [B, S], neg [B, S, n_neg]} — per-position
+    next-item prediction (paper's BCE generalized to n_neg negatives)."""
+    reps = user_tower(params, batch["hist"], cfg)                 # [B, S, d]
+    emb = params["item_emb"]
+    pos_e = jnp.take(emb, jnp.maximum(batch["pos"], 0), axis=0)
+    neg_e = jnp.take(emb, jnp.maximum(batch["neg"], 0), axis=0)
+    pos_s = jnp.sum(reps * pos_e, -1)                             # [B, S]
+    neg_s = jnp.einsum("bsd,bsnd->bsn", reps, neg_e)
+    valid = (batch["pos"] >= 0).astype(jnp.float32)
+    loss = -jax.nn.log_sigmoid(pos_s) - jnp.sum(
+        jnp.log1p(-jax.nn.sigmoid(neg_s) + 1e-7), axis=-1
+    )
+    return jnp.sum(loss * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def retrieval_scores(params, hist, cfg: SASRecConfig, candidates=None):
+    """MIPS over the item table (or explicit candidate rows) — the exact
+    scoring path of `retrieval_cand`; graph-index serving uses
+    core.IpNSWPlus over ``params["item_emb"]`` instead."""
+    u = user_embedding(params, hist, cfg)                        # [B, d]
+    items = params["item_emb"] if candidates is None else candidates
+    return jnp.einsum(
+        "bd,nd->bn", u, items, preferred_element_type=jnp.float32
+    )

@@ -1,0 +1,427 @@
+"""Dense + MoE decoder-only LM — the assigned-architecture substrate.
+
+Layers are stacked [n_rep, P, ...] and applied with ``lax.scan`` over n_rep
+(compile-time O(1) in depth); P = len(window_pattern) is the static
+local/global attention cycle (gemma3: 5 sliding + 1 global).  Remat
+(activation checkpointing) wraps each scan body.
+
+Entry points (all pure; mesh passed explicitly for the MoE shard_map):
+  init(key, cfg)                         -> (params, specs)
+  forward(params, tokens, cfg, mesh)     -> (logits, aux_loss)
+  lm_loss(params, batch, cfg, mesh)      -> scalar loss
+  init_cache(cfg, batch, max_len)        -> per-pattern KV caches
+  serve_prefill(params, tokens, cfg, ..) -> (logits, cache)
+  serve_step(params, cache, token, off)  -> (logits, new cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import moe as M
+
+BATCH_AXES = L.BATCH_AXES
+MODEL_AXIS = L.MODEL_AXIS
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 10000.0
+    # cycle of per-layer attention windows; None = global full attention.
+    # gemma3: (W, W, W, W, W, None) — 5 local : 1 global.
+    window_pattern: Tuple[Optional[int], ...] = (None,)
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_expert_split: int = 1   # store each expert as N ffn column-shards
+    capacity_factor: float = 1.25
+    tied_embed: bool = False
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attn_chunk: int = 512
+    # Megatron-style sequence parallelism: shard the residual stream's seq
+    # dim over "model" between blocks (activation memory / P; the AG/RS pair
+    # it induces is the Megatron-SP schedule).  Applied when S >= 2048.
+    seq_parallel: bool = True
+    # §Perf knobs (EXPERIMENTS.md): online-softmax attention + chunked
+    # cross-entropy keep the fp32 score/logit matrices off HBM.
+    flash: bool = True
+    kv_chunk: int = 1024
+    loss_chunk: int = 1024  # 0 = materialize full [B, S, V] logits
+
+    @property
+    def pattern_len(self) -> int:
+        return len(self.window_pattern)
+
+    @property
+    def n_rep(self) -> int:
+        assert self.n_layers % self.pattern_len == 0, (
+            self.n_layers,
+            self.window_pattern,
+        )
+        return self.n_layers // self.pattern_len
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    def param_count(self) -> int:
+        """Total parameters (for the roofline's 6*N*D term)."""
+        attn = self.d_model * self.head_dim * (self.n_heads * 2 + self.n_kv * 2)
+        if self.is_moe:
+            ffn = self.moe_experts * 3 * self.d_model * self.d_ff
+            ffn += self.d_model * self.moe_experts
+        else:
+            ffn = 3 * self.d_model * self.d_ff
+        per_layer = attn + ffn + 2 * self.d_model
+        embed = self.vocab * self.d_model * (1 if self.tied_embed else 2)
+        return self.n_layers * per_layer + embed + self.d_model
+
+    def active_param_count(self) -> int:
+        """Activated parameters per token (MoE: top_k of moe_experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        attn = self.d_model * self.head_dim * (self.n_heads * 2 + self.n_kv * 2)
+        ffn = self.moe_top_k * 3 * self.d_model * self.d_ff
+        ffn += self.d_model * self.moe_experts
+        per_layer = attn + ffn + 2 * self.d_model
+        embed = self.vocab * self.d_model * (1 if self.tied_embed else 2)
+        return self.n_layers * per_layer + embed + self.d_model
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: TransformerConfig):
+    k1, k2 = jax.random.split(key)
+    p = {}
+    p["attn"], _ = L.attention_init(
+        k1, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim, cfg.dtype
+    )
+    if cfg.is_moe:
+        p["ffn"], _ = M.moe_init(
+            k2, cfg.d_model, cfg.d_ff, cfg.moe_experts, cfg.dtype,
+            expert_split=cfg.moe_expert_split,
+        )
+    else:
+        p["ffn"], _ = L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.dtype)
+    p["ln1"], _ = L.rmsnorm_init(cfg.d_model, cfg.dtype)
+    p["ln2"], _ = L.rmsnorm_init(cfg.d_model, cfg.dtype)
+    return p
+
+
+def _layer_specs(cfg: TransformerConfig):
+    return {
+        "attn": L.attention_specs(),
+        "ffn": M.moe_specs() if cfg.is_moe else L.mlp_specs(),
+        "ln1": P(None),
+        "ln2": P(None),
+    }
+
+
+def init(key, cfg: TransformerConfig):
+    ke, ku, kl = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, (cfg.n_rep, cfg.pattern_len))
+    blocks = jax.vmap(jax.vmap(lambda k: _layer_init(k, cfg)))(layer_keys)
+    params = {
+        "embed": L._dense_init(ke, (cfg.vocab, cfg.d_model), cfg.dtype, scale=1.0),
+        "blocks": blocks,
+        "final_ln": L.rmsnorm_init(cfg.d_model, cfg.dtype)[0],
+    }
+    if not cfg.tied_embed:
+        params["unembed"] = L._dense_init(ku, (cfg.d_model, cfg.vocab), cfg.dtype)
+    return params, specs(cfg)
+
+
+def specs(cfg: TransformerConfig):
+    lay = _layer_specs(cfg)
+    stacked = jax.tree.map(
+        lambda s: P(None, None, *s),
+        lay,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    out = {
+        "embed": P(MODEL_AXIS, None),
+        "blocks": stacked,
+        "final_ln": P(None),
+    }
+    if not cfg.tied_embed:
+        out["unembed"] = P(None, MODEL_AXIS)
+    return out
+
+
+def abstract_params(cfg: TransformerConfig, key=None):
+    """Parameter ShapeDtypeStructs without allocation (dry-run input)."""
+    k = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(lambda kk: init(kk, cfg)[0], k)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(
+    bp, x, positions, cfg, window, mesh, kv_cache=None, q_offset=0, res_spec=None
+):
+    h, new_kv = L.attention(
+        bp["attn"],
+        L.rmsnorm(x, bp["ln1"]),
+        positions,
+        n_kv=cfg.n_kv,
+        window=window,
+        kv_cache=kv_cache,
+        q_offset=q_offset,
+        rope_theta=cfg.rope_theta,
+        chunk=cfg.attn_chunk,
+        flash=cfg.flash,
+        kv_chunk=cfg.kv_chunk,
+    )
+    x = x + h
+    if res_spec is not None:
+        # §Perf (H1): pin the residual boundary right at the partial-sum so
+        # GSPMD emits a bf16 reduce-scatter here instead of hoisting the
+        # fp32 convert above a full all-reduce.
+        x = L.shard(x, *res_spec)
+    h2 = L.rmsnorm(x, bp["ln2"])
+    if cfg.is_moe:
+        ff, aux = M.moe_apply(
+            bp["ffn"],
+            h2,
+            n_experts=cfg.moe_experts,
+            top_k=cfg.moe_top_k,
+            capacity_factor=cfg.capacity_factor,
+            expert_split=cfg.moe_expert_split,
+            mesh=mesh,
+        )
+    else:
+        ff, aux = L.mlp(bp["ffn"], h2), jnp.float32(0.0)
+    return x + ff, new_kv, aux
+
+
+def forward(params, tokens, cfg: TransformerConfig, mesh=None):
+    """tokens [B, S] -> (logits [B, S, V] fp32, aux_loss)."""
+    b, s = tokens.shape
+    sp = cfg.seq_parallel and s >= 2048
+    res_spec = ("batch", MODEL_AXIS, None) if sp else ("batch", None, None)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = L.shard(x, *res_spec)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def rep_body(x, rep_params):
+        aux_tot = jnp.float32(0.0)
+        for p_i, window in enumerate(cfg.window_pattern):
+            bp = jax.tree.map(lambda a: a[p_i], rep_params)
+            x, _, aux = _block_apply(
+                bp, x, positions, cfg, window, mesh, res_spec=res_spec
+            )
+            aux_tot += aux
+        x = L.shard(x, *res_spec)  # saved scan carry: seq-parallel residuals
+        return x, aux_tot
+
+    body = jax.checkpoint(rep_body) if cfg.remat else rep_body
+    x, auxes = jax.lax.scan(body, x, params["blocks"])
+
+    x = L.rmsnorm(x, params["final_ln"])
+    unembed = (
+        params["embed"].T if cfg.tied_embed else params["unembed"]
+    )
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, unembed, preferred_element_type=jnp.float32
+    )
+    logits = L.shard(logits, "batch", None, MODEL_AXIS)
+    return logits, jnp.sum(auxes)
+
+
+def hidden_states(params, tokens, cfg: TransformerConfig, mesh=None):
+    """Forward up to (and incl.) the final norm: [B, S, d] + aux — used by
+    the chunked loss so the [B, S, V] logits never materialize."""
+    b, s = tokens.shape
+    sp = cfg.seq_parallel and s >= 2048
+    res_spec = ("batch", MODEL_AXIS, None) if sp else ("batch", None, None)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = L.shard(x, *res_spec)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def rep_body(x, rep_params):
+        aux_tot = jnp.float32(0.0)
+        for p_i, window in enumerate(cfg.window_pattern):
+            bp = jax.tree.map(lambda a: a[p_i], rep_params)
+            x, _, aux = _block_apply(
+                bp, x, positions, cfg, window, mesh, res_spec=res_spec
+            )
+            aux_tot += aux
+        x = L.shard(x, *res_spec)
+        return x, aux_tot
+
+    body = jax.checkpoint(rep_body) if cfg.remat else rep_body
+    x, auxes = jax.lax.scan(body, x, params["blocks"])
+    return L.rmsnorm(x, params["final_ln"]), jnp.sum(auxes)
+
+
+def lm_loss(params, batch, cfg: TransformerConfig, mesh=None, aux_weight=0.01):
+    """batch = {"tokens": [B, S] int32, "labels": [B, S] int32}.
+
+    §Perf (loss_chunk > 0): the cross-entropy is computed in sequence chunks
+    under remat, so the peak logits buffer is [B, chunk, V/model] instead of
+    [B, S, V/model] (fp32) — the memory-term fix for the big-vocab archs.
+    """
+    b, s = batch["tokens"].shape
+    unembed = params["embed"].T if cfg.tied_embed else params["unembed"]
+
+    if cfg.loss_chunk and s % cfg.loss_chunk == 0 and s > cfg.loss_chunk:
+        x, aux = hidden_states(params, batch["tokens"], cfg, mesh)
+        n = s // cfg.loss_chunk
+        xc = jnp.moveaxis(x.reshape(b, n, cfg.loss_chunk, -1), 1, 0)
+        lc = jnp.moveaxis(
+            batch["labels"].astype(jnp.int32).reshape(b, n, cfg.loss_chunk), 1, 0
+        )
+
+        @jax.checkpoint
+        def chunk_nll(xi, li):
+            logits = jnp.einsum(
+                "bsd,dv->bsv", xi, unembed, preferred_element_type=jnp.float32
+            )
+            logits = L.shard(logits, "batch", None, MODEL_AXIS)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+            return jnp.sum(logz - gold)
+
+        def body(tot, args):
+            xi, li = args
+            return tot + chunk_nll(xi, li), None
+
+        tot, _ = jax.lax.scan(body, jnp.float32(0.0), (xc, lc))
+        nll = tot / (b * s)
+    else:
+        logits, aux = forward(params, batch["tokens"], cfg, mesh)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, batch["labels"][..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        nll = jnp.mean(logz - gold)
+    return nll + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# serving (prefill + decode with per-pattern KV caches)
+# ---------------------------------------------------------------------------
+
+
+def cache_len(cfg: TransformerConfig, window: Optional[int], max_len: int) -> int:
+    return max_len if window is None else min(window, max_len)
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=None):
+    """Per-pattern-position KV caches: tuple over P of (k, v) stacked over
+    n_rep — sliding-window layers allocate only ``window`` slots (the
+    sub-quadratic memory path for long_500k)."""
+    dtype = dtype or cfg.dtype
+    caches = []
+    for window in cfg.window_pattern:
+        t = cache_len(cfg, window, max_len)
+        shape = (cfg.n_rep, batch, t, cfg.n_kv, cfg.head_dim)
+        caches.append((jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)))
+    return tuple(caches)
+
+
+def cache_specs(cfg: TransformerConfig, batch=("data",), seq=(MODEL_AXIS,)):
+    """Shardings for the cache [n_rep, B, T, kv, hd]: batch over the data
+    axes; sequence over ``seq`` (flash-decoding style — XLA lowers the masked
+    softmax-reduction over the sharded axis into partial reductions +
+    all-reduce).  For batch-1 long-context decode pass batch=() and
+    seq=(every axis,)."""
+    b = tuple(batch) if batch else None
+    s = tuple(seq) if seq else None
+    return tuple(
+        (P(None, b, s, None, None), P(None, b, s, None, None))
+        for _ in cfg.window_pattern
+    )
+
+
+def serve_prefill(params, tokens, cfg: TransformerConfig, mesh=None, max_len=None):
+    """Prefill: run the full prompt, materialize caches.  Returns
+    (last-token logits [B, V], caches).  max_len >= S sizes the cache."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    sp = cfg.seq_parallel and s >= 2048
+    res_spec = ("batch", MODEL_AXIS, None) if sp else ("batch", None, None)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = L.shard(x, *res_spec)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    # prefill writes caches; scan collects per-rep (k, v) stacks
+    def rep_body(x, rep_params):
+        kvs = []
+        for p_i, window in enumerate(cfg.window_pattern):
+            bp = jax.tree.map(lambda a: a[p_i], rep_params)
+            x, kv, _ = _block_apply(
+                bp, x, positions, cfg, window, mesh, res_spec=res_spec
+            )
+            t = cache_len(cfg, window, max_len)
+            k, v = kv
+            if s >= t:
+                k, v = k[:, s - t :], v[:, s - t :]
+            else:
+                pad = t - s
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kvs.append((k.astype(cfg.dtype), v.astype(cfg.dtype)))
+        x = L.shard(x, *res_spec)
+        return x, tuple(kvs)
+
+    body = jax.checkpoint(rep_body) if cfg.remat else rep_body
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+
+    x = L.rmsnorm(x[:, -1:], params["final_ln"])
+    unembed = params["embed"].T if cfg.tied_embed else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed, preferred_element_type=jnp.float32)
+    return logits[:, 0], caches
+
+
+def serve_step(params, caches, token, q_offset, cfg: TransformerConfig, mesh=None):
+    """One decode step.  token [B, 1] int32; q_offset [] int32 = absolute
+    position of the new token.  Returns (logits [B, V], new caches).
+
+    NOTE on ring caches: prefill stores the last ``t`` positions at their
+    natural slots only when s % t == 0 (true for our power-of-two shapes);
+    the serve example uses max_len % window == 0 accordingly.
+    """
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0)
+    positions = jnp.full((1,), q_offset, jnp.int32)
+
+    def rep_body(x, args):
+        rep_params = args[0]
+        rep_caches = args[1:]
+        new_kvs = []
+        for p_i, window in enumerate(cfg.window_pattern):
+            bp = jax.tree.map(lambda a: a[p_i], rep_params)
+            x, kv, _ = _block_apply(
+                bp, x, positions, cfg, window, mesh,
+                kv_cache=rep_caches[p_i], q_offset=q_offset,
+            )
+            new_kvs.append(kv)
+        return x, tuple(new_kvs)
+
+    x, new_caches = jax.lax.scan(rep_body, x, (params["blocks"],) + caches)
+
+    x = L.rmsnorm(x, params["final_ln"])
+    unembed = params["embed"].T if cfg.tied_embed else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed, preferred_element_type=jnp.float32)
+    return logits[:, 0], new_caches

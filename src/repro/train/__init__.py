@@ -1,0 +1,9 @@
+from repro.train.optimizer import (
+    AdamWState,
+    adamw_init,
+    adamw_specs,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+)
+from repro.train import checkpoint, compress, loop

@@ -1,0 +1,84 @@
+"""AdamW + schedules, implemented directly in JAX (no optax dependency).
+
+Moments are fp32 regardless of param dtype (bf16 params + fp32 moments is the
+memory plan that fits grok-1/qwen3 on v5e — DESIGN.md §5); optimizer state
+shards exactly like the parameters (ZeRO-style via identical NamedSharding).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # [] int32
+    mu: dict
+    nu: dict
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_specs(param_specs) -> AdamWState:
+    """Optimizer-state shardings mirror the parameter shardings."""
+    return AdamWState(step=P(), mu=param_specs, nu=param_specs)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), tree, 0.0
+    )
+    return jnp.sqrt(sq)
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip: float = 1.0,
+):
+    """Returns (new_params, new_state).  ``lr`` may be a scalar array."""
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(gn, 1e-9))
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int, min_frac=0.1):
+    s = step.astype(jnp.float32)
+    warm = base_lr * s / max(warmup, 1)
+    t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(s < warmup, warm, cos)

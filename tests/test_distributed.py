@@ -1,0 +1,161 @@
+"""Multi-device semantics, via subprocesses with forced host devices (the
+main test process keeps 1 device).  Each subprocess asserts agreement between
+the shard_map path and its single-device oracle."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = REPO_SRC
+    r = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_sharded_mips_search_matches_reference():
+    _run(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.distributed import build_sharded, sharded_search, sharded_search_reference
+rng = np.random.default_rng(1)
+items = jnp.asarray(rng.normal(size=(2048, 16)).astype(np.float32))
+queries = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+idx = build_sharded(items, 8, plus=True, max_degree=8, ef_construction=16, insert_batch=256)
+ids_ref, sc_ref, ev_ref = sharded_search_reference(idx, queries, k=5, ef=16, plus=True)
+mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+ids_sm, sc_sm, ev_sm = sharded_search(idx, queries, mesh=mesh, k=5, ef=16, plus=True)
+assert np.array_equal(np.asarray(ids_ref), np.asarray(ids_sm))
+assert np.allclose(np.asarray(sc_ref), np.asarray(sc_sm))
+# degraded serving keeps availability
+mask = np.ones(8, bool); mask[2] = False
+ids_dg, _, _ = sharded_search(idx, queries, mesh=mesh, k=5, ef=16, plus=True, shard_mask=jnp.asarray(mask))
+assert np.asarray(ids_dg).shape == (8, 5)
+print("OK")
+"""
+    )
+
+
+def test_moe_sharded_matches_local():
+    _run(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.models import moe as M
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+d, f, E = 16, 32, 8
+params, _ = M.moe_init(jax.random.PRNGKey(0), d, f, E, jnp.float32)
+x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8, d)).astype(np.float32))
+# big capacity => no drops => sharded == local exactly
+o_local, aux_l = M.moe_apply(params, x, n_experts=E, top_k=2, capacity_factor=16.0)
+o_shard, aux_s = M.moe_apply(params, x, n_experts=E, top_k=2, capacity_factor=16.0, mesh=mesh)
+# token outputs agree exactly; the aux load-balance loss is computed per
+# data shard (mean of per-shard E[me*ce] != global E[me*ce]) — standard for
+# dp-sharded MoE aux, so only loosely compared.
+assert np.allclose(np.asarray(o_local), np.asarray(o_shard), rtol=1e-4, atol=1e-5), np.abs(np.asarray(o_local)-np.asarray(o_shard)).max()
+assert abs(float(aux_l) - float(aux_s)) < 0.15 * abs(float(aux_l))
+print("OK")
+"""
+    )
+
+
+def test_gnn_sharded_matches_local():
+    _run(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.models import gnn as G
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = G.GNNConfig(n_layers=2, d_hidden=16, d_feat=8, d_edge=4, remat=False)
+params, _ = G.init(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+N, E = 64, 128  # divisible by 8 devices
+graph = dict(
+    node_feat=jnp.asarray(rng.normal(size=(N, 8)).astype(np.float32)),
+    edge_feat=jnp.asarray(rng.normal(size=(E, 4)).astype(np.float32)),
+    src=jnp.asarray(rng.integers(0, N, E).astype(np.int32)),
+    dst=jnp.asarray(rng.integers(0, N, E).astype(np.int32)),
+    targets=jnp.asarray(rng.normal(size=(N, 3)).astype(np.float32)),
+)
+out_local = G.forward(params, graph, cfg)
+out_shard = G.forward(params, graph, cfg, mesh=mesh)
+assert np.allclose(np.asarray(out_local), np.asarray(out_shard), rtol=1e-4, atol=1e-5)
+# gradients agree too (collectives differentiate correctly)
+g1 = jax.grad(G.mse_loss)(params, graph, cfg)
+g2 = jax.grad(lambda p: G.mse_loss(p, graph, cfg, mesh=mesh))(params)
+d1 = jax.tree.leaves(g1)[0]; d2 = jax.tree.leaves(g2)[0]
+assert np.allclose(np.asarray(d1), np.asarray(d2), rtol=1e-3, atol=1e-5)
+print("OK")
+"""
+    )
+
+
+def test_compressed_allreduce_error_feedback():
+    _run(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.train.compress import make_compressed_allreduce
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+f = make_compressed_allreduce(mesh, ("data",))
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(8, 512)).astype(np.float32))
+e = jnp.zeros_like(x)
+exact = jnp.mean(x, axis=0)
+m1, e1 = f(x, e)
+err1 = float(jnp.max(jnp.abs(m1[0] - exact)))
+tot = jnp.zeros_like(exact); ecur = jnp.zeros_like(x)
+for _ in range(20):
+    m, ecur = f(x, ecur)
+    tot = tot + m[0]
+err20 = float(jnp.max(jnp.abs(tot / 20 - exact)))
+assert err20 < err1 * 0.5, (err1, err20)
+print("OK")
+"""
+    )
+
+
+def test_lm_train_step_sharded_2x2():
+    """Tiny LM train step under jit with 2x2 mesh NamedShardings — the same
+    wiring the production dry-run uses, on real (forced) devices."""
+    _run(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+import dataclasses
+from repro.models import transformer as tf, layers as L
+from repro.train import adamw_init, adamw_update
+
+mesh = jax.make_mesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+L.set_batch_axes_for_mesh(mesh)
+cfg = tf.TransformerConfig(name="t", n_layers=2, d_model=32, n_heads=4, n_kv=2,
+    head_dim=8, d_ff=64, vocab=64, dtype=jnp.float32, attn_chunk=8, remat=False,
+    moe_experts=4, moe_top_k=2)
+params, specs = tf.init(jax.random.PRNGKey(0), cfg)
+ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                               is_leaf=lambda x: isinstance(x, P))
+params = jax.device_put(params, ns(specs))
+opt = adamw_init(params)
+toks = jnp.asarray(np.random.default_rng(0).integers(0, 64, (4, 16)).astype(np.int32))
+batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+
+def train_step(params, opt, batch):
+    loss, grads = jax.value_and_grad(tf.lm_loss)(params, batch, cfg, mesh)
+    return adamw_update(grads, opt, params, lr=1e-3) + (loss,)
+
+with mesh:
+    p2, o2, loss = jax.jit(train_step)(params, opt, batch)
+assert np.isfinite(float(loss))
+# compare against single-device result (tolerance covers the per-shard MoE
+# aux-loss statistic, weight 0.01 — see test_moe_sharded_matches_local)
+loss_ref = tf.lm_loss(jax.device_get(params), batch, cfg)
+assert abs(float(loss) - float(loss_ref)) < 5e-3, (float(loss), float(loss_ref))
+print("OK")
+"""
+    )

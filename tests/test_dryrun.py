@@ -1,0 +1,38 @@
+"""End-to-end dry-run deliverable test: one real cell is lowered + compiled
+on the production single-pod mesh (512 forced host devices, subprocess so
+the main test process keeps 1 device), then the roofline analyzer consumes
+its artifacts."""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_dryrun_cell_compiles_and_roofline_analyzes(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "sasrec", "--shape", "serve_p99",
+            "--mesh", "single", "--out", str(tmp_path),
+        ],
+        env=env, capture_output=True, text=True, timeout=900, cwd=REPO,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+
+    rec_path = tmp_path / "sasrec__serve_p99__single.json"
+    assert rec_path.exists()
+    rec = json.loads(rec_path.read_text())
+    assert rec["n_devices"] == 256
+    assert rec["mesh"] == "16x16"
+    assert rec["cost"].get("flops", 0) > 0
+    assert "peak_bytes_per_device" in rec["memory"]
+
+    from repro.launch.roofline import analyze_record
+
+    out = analyze_record(str(rec_path))
+    assert out["dominant"] in ("compute", "memory", "collective")
+    assert out["compute_s"] >= 0 and out["memory_s"] > 0

@@ -1,0 +1,151 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.gather_score import gather_score, gather_score_ref
+from repro.kernels.mips_topk import mips_topk, mips_topk_ref
+from repro.kernels.topk_merge import topk_merge, topk_merge_ref
+
+
+@pytest.mark.parametrize(
+    "b,n,d,k",
+    [
+        (1, 200, 16, 5),
+        (7, 1000, 48, 10),
+        (32, 4096, 300, 10),
+        (128, 777, 150, 20),
+        (9, 513, 384, 1),
+    ],
+)
+def test_mips_topk_matches_ref(rng, b, n, d, k):
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    vs, ids = mips_topk(q, x, k=k)
+    rvs, rids = mips_topk_ref(q, x, k=k)
+    np.testing.assert_allclose(np.asarray(vs), np.asarray(rvs), rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(ids), np.asarray(rids))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_mips_topk_dtypes(rng, dtype):
+    q = jnp.asarray(rng.normal(size=(4, 64)).astype(dtype))
+    x = jnp.asarray(rng.normal(size=(512, 64)).astype(dtype))
+    vs, ids = mips_topk(q, x, k=8)
+    rvs, rids = mips_topk_ref(q.astype(jnp.float32), x.astype(jnp.float32), k=8)
+    np.testing.assert_allclose(np.asarray(vs), np.asarray(rvs), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize(
+    "b,n,d,w",
+    [(1, 50, 7, 3), (4, 100, 33, 7), (16, 512, 300, 16), (64, 2048, 128, 32)],
+)
+def test_gather_score_matches_ref(rng, b, n, d, w):
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, n, size=(b, w)).astype(np.int32))
+    s = gather_score(q, x, ids)
+    r = gather_score_ref(q, x, ids)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(r), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,l,m", [(1, 8, 4), (5, 16, 8), (130, 64, 16), (64, 32, 32)])
+def test_topk_merge_matches_ref(rng, b, l, m):
+    args = (
+        rng.normal(size=(b, l)).astype(np.float32),
+        rng.integers(0, 1000, (b, l)).astype(np.int32),
+        rng.integers(0, 2, (b, l)).astype(np.int32),
+        rng.normal(size=(b, m)).astype(np.float32),
+        rng.integers(0, 1000, (b, m)).astype(np.int32),
+        rng.integers(0, 2, (b, m)).astype(np.int32),
+    )
+    out = topk_merge(*map(jnp.asarray, args))
+    ref = topk_merge_ref(*map(jnp.asarray, args))
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]))
+    assert np.array_equal(np.asarray(out[1]), np.asarray(ref[1]))
+    assert np.array_equal(np.asarray(out[2]), np.asarray(ref[2]))
+
+
+def test_gather_score_is_beam_search_compatible(rng):
+    """gather_score can replace similarity.gather_scores as score_fn."""
+    from repro.core.graph import empty_graph
+    from repro.core.search import beam_search
+    from repro.core.build import build_graph
+    import functools
+
+    items = jnp.asarray(rng.normal(size=(300, 16)).astype(np.float32))
+    g = build_graph(items, max_degree=8, ef_construction=16, insert_batch=64)
+    q = jnp.asarray(rng.normal(size=(5, 16)).astype(np.float32))
+    init = jnp.broadcast_to(g.entry[None, None], (5, 1)).astype(jnp.int32)
+    r1 = beam_search(g, q, init, pool_size=16, max_steps=32, k=5)
+    r2 = beam_search(
+        g, q, init, pool_size=16, max_steps=32, k=5,
+        score_fn=functools.partial(gather_score),
+    )
+    assert np.array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+
+
+@pytest.mark.parametrize(
+    "s,t,hd,off,win",
+    [(128, 128, 64, 0, None), (128, 256, 64, 128, None),
+     (128, 128, 64, 0, 32), (256, 256, 128, 0, None)],
+)
+def test_flash_attn_head_matches_ref(rng, s, t, hd, off, win):
+    from repro.kernels.flash_attn import (
+        flash_attention_head,
+        flash_attention_head_ref,
+    )
+
+    q = jnp.asarray(rng.normal(size=(s, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(t, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(t, hd)).astype(np.float32))
+    out = flash_attention_head(q, k, v, q_offset=off, window=win, bq=64, bk=64)
+    ref = flash_attention_head_ref(q, k, v, q_offset=off, window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attn_gqa_wrapper(rng):
+    from repro.kernels.flash_attn import flash_attention, flash_attention_head_ref
+
+    B, S, H, KV, hd = 2, 128, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)).astype(np.float32))
+    out = np.asarray(flash_attention(q, k, v, bq=64, bk=64)).reshape(B, S, KV, H // KV, hd)
+    qg = np.asarray(q.reshape(B, S, KV, H // KV, hd))
+    for b in range(B):
+        for n in range(KV):
+            for g in range(H // KV):
+                ref = flash_attention_head_ref(
+                    jnp.asarray(qg[b, :, n, g]), k[b, :, n], v[b, :, n]
+                )
+                np.testing.assert_allclose(out[b, :, n, g], np.asarray(ref),
+                                           rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attn_jnp_path_matches_block(rng):
+    """models/layers.py jnp flash (custom_vjp) vs the dense block oracle."""
+    from repro.models import layers as L
+
+    qg = jnp.asarray(rng.normal(size=(2, 8, 2, 3, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 32, 2, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 32, 2, 16)).astype(np.float32))
+    q_pos = jnp.arange(8, 16, dtype=jnp.int32)
+    k_pos = jnp.arange(32, dtype=jnp.int32)
+    import jax
+
+    for w in (None, 5):
+        ref = L._attend_block(qg, k, v, q_pos, k_pos, w)
+        out = L._attend_flash(qg, k, v, q_pos, k_pos, w, 8)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+        for argnum in (0, 1, 2):
+            g1 = jax.grad(
+                lambda *a: jnp.sum(L._attend_block(*a, q_pos, k_pos, w) ** 2),
+                argnums=argnum,
+            )(qg, k, v)
+            g2 = jax.grad(
+                lambda *a: jnp.sum(L._attend_flash(*a, q_pos, k_pos, w, 8) ** 2),
+                argnums=argnum,
+            )(qg, k, v)
+            np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                       rtol=1e-4, atol=1e-4)

@@ -1,0 +1,80 @@
+"""Launch-layer units: HLO collective parser, mesh helpers, config registry."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, all_cells, get_arch
+from repro.launch.dryrun import _shape_bytes, collective_stats
+
+
+def test_registry_covers_10_archs():
+    assert len(ARCH_IDS) == 10
+    for aid in ARCH_IDS:
+        arch = get_arch(aid)
+        assert arch.shape_names(), aid
+
+
+def test_cell_enumeration_counts():
+    cells = all_cells()
+    by_family = {}
+    for aid, shape in cells:
+        fam = get_arch(aid).family
+        by_family[fam] = by_family.get(fam, 0) + 1
+    # 4 full-attention LMs x 3 + gemma3 x 4 = 16; 4 gnn; 16 recsys
+    assert by_family == {"lm": 16, "gnn": 4, "recsys": 16}
+    assert len(cells) == 36  # + 4 documented long_500k skips = 40 assigned
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert _shape_bytes("bf16[2,3]{1,0}") == 12
+    assert _shape_bytes("(f32[4], s32[4])") == 32
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_collective_stats_parses_and_multiplies():
+    hlo = """
+ENTRY %main () -> f32[8] {
+  %x = f32[1024,256]{1,0} all-gather(f32[64,256]{1,0} %p), replica_groups={}
+  %y = f32[512]{0} all-reduce(f32[512]{0} %q), to_apply=%add
+  %z = f32[32,16]{1,0} reduce-scatter(f32[512,16]{1,0} %r), dimensions={0}
+  %w = bf16[64]{0} all-to-all(bf16[64]{0} %s)
+  %cp = f32[16]{0} collective-permute(f32[16]{0} %t)
+  %ag2 = f32[128]{0} all-gather-start(f32[8]{0} %u)
+}
+"""
+    st = collective_stats(hlo)
+    assert st["ops"] == 6
+    ar = st["by_kind"]["all-reduce"]
+    assert ar["result_bytes"] == 512 * 4
+    assert ar["wire_bytes"] == 512 * 4 * 2.0  # ring all-reduce 2x
+    ag = st["by_kind"]["all-gather"]
+    assert ag["ops"] == 2
+
+
+def test_mesh_helpers():
+    from repro.launch.mesh import batch_axes_of, data_parallelism, make_host_mesh
+
+    m = make_host_mesh(1)
+    assert batch_axes_of(m) == ()
+    assert data_parallelism(m) == 1
+
+
+def test_lm_arch_skips_long_for_full_attention():
+    assert "long_500k" not in get_arch("internlm2-20b").shape_names()
+    assert "long_500k" in get_arch("gemma3-12b").shape_names()
+
+
+def test_param_counts_match_advertised_scale():
+    """Model sizes land near the advertised parameter counts."""
+    p20 = get_arch("internlm2-20b").cfg.param_count()
+    assert 17e9 < p20 < 23e9, p20
+    p235 = get_arch("qwen3-moe-235b-a22b").cfg.param_count()
+    assert 210e9 < p235 < 260e9, p235
+    a22 = get_arch("qwen3-moe-235b-a22b").cfg.active_param_count()
+    assert 18e9 < a22 < 26e9, a22
+    p314 = get_arch("grok-1-314b").cfg.param_count()
+    assert 290e9 < p314 < 340e9, p314
+    p12 = get_arch("gemma3-12b").cfg.param_count()
+    assert 10e9 < p12 < 14e9, p12
+    p2 = get_arch("granite-3-2b").cfg.param_count()
+    assert 2e9 < p2 < 4e9, p2

@@ -1,0 +1,144 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.search import _dedup_ids
+from repro.core.norms import (
+    norm_group_of,
+    group_occupancy,
+    theorem1_probability,
+    theorem2_conditional,
+)
+from repro.core.metrics import recall_at_k
+from repro.kernels.topk_merge import topk_merge, topk_merge_ref
+from repro.models.recsys.embedding import embedding_bag, embedding_bag_ragged
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    st.integers(1, 6).flatmap(
+        lambda b: st.lists(
+            st.lists(st.integers(-1, 20), min_size=4, max_size=4),
+            min_size=b,
+            max_size=b,
+        )
+    )
+)
+@settings(**SETTINGS)
+def test_dedup_ids_removes_duplicates(rows):
+    ids = jnp.asarray(np.array(rows, dtype=np.int32))
+    out = np.asarray(_dedup_ids(ids))
+    for r_in, r_out in zip(np.asarray(ids), out):
+        kept = r_out[r_out >= 0]
+        # no duplicates survive
+        assert len(set(kept.tolist())) == len(kept)
+        # every unique non-negative id is kept exactly once
+        expect = set(x for x in r_in.tolist() if x >= 0)
+        assert set(kept.tolist()) == expect
+
+
+@given(st.floats(1.0, 16.0))
+@settings(**SETTINGS)
+def test_theorem1_bounds_and_monotonicity(alpha):
+    p = theorem1_probability(alpha)
+    assert 0.5 - 1e-6 <= p <= 1.0
+    assert theorem1_probability(alpha + 1.0) >= p - 1e-9
+
+
+def test_theorem1_alpha1_is_half():
+    assert abs(theorem1_probability(1.0) - 0.5) < 1e-4
+
+
+@given(
+    st.floats(0.1, 0.999),
+    st.floats(0.1, 10.0),
+    st.floats(0.1, 10.0),
+    st.floats(0.1, 10.0),
+)
+@settings(**SETTINGS)
+def test_theorem2_conditional_matches_monte_carlo(beta, gamma, xn, yn):
+    """x.z | y.z = gamma is N(gamma*beta*|x|/|y|, |x|^2(1-beta^2)) — checked
+    against explicit construction of x with angle beta to y."""
+    d = 4096
+    rng = np.random.default_rng(0)
+    y = np.zeros(d)
+    y[0] = yn
+    x = np.zeros(d)
+    x[0] = beta * xn
+    x[1] = np.sqrt(max(1 - beta**2, 0.0)) * xn
+    mean, std = theorem2_conditional(beta, gamma, xn, yn)
+    # z conditioned on y.z = gamma: z0 = gamma/yn, others free N(0,1)
+    z = rng.normal(size=(20000, d))
+    z[:, 0] = gamma / yn
+    xz = z @ x
+    assert abs(xz.mean() - mean) < 5 * std / np.sqrt(20000) + 1e-3
+    assert abs(xz.std() - std) < 0.05 * std + 1e-3
+
+
+@given(st.integers(5, 200), st.integers(1, 20))
+@settings(**SETTINGS)
+def test_norm_groups_partition(n, n_groups):
+    rng = np.random.default_rng(n)
+    norms = rng.uniform(0.1, 2.0, n)
+    g = norm_group_of(norms, n_groups)
+    assert g.min() >= 0 and g.max() < n_groups
+    occ = group_occupancy(np.arange(n), g, n_groups)
+    assert abs(occ.sum() - 1.0) < 1e-9
+    # the top group holds the largest norms
+    top = norms[g == 0]
+    rest = norms[g != 0]
+    if len(top) and len(rest):
+        assert top.min() >= rest.max() - 1e-12
+
+
+@given(st.integers(1, 40), st.integers(1, 16), st.integers(1, 16))
+@settings(**SETTINGS)
+def test_topk_merge_property(b, l, m):
+    rng = np.random.default_rng(b * 1000 + l * 16 + m)
+    args = (
+        rng.normal(size=(b, l)).astype(np.float32),
+        rng.integers(0, 100, (b, l)).astype(np.int32),
+        rng.integers(0, 2, (b, l)).astype(np.int32),
+        rng.normal(size=(b, m)).astype(np.float32),
+        rng.integers(0, 100, (b, m)).astype(np.int32),
+        rng.integers(0, 2, (b, m)).astype(np.int32),
+    )
+    out = topk_merge(*map(jnp.asarray, args))
+    ref = topk_merge_ref(*map(jnp.asarray, args))
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]), rtol=1e-6)
+    # merged scores are sorted descending
+    s = np.asarray(out[0])
+    assert np.all(np.diff(s, axis=1) <= 1e-6)
+
+
+@given(st.integers(1, 8), st.integers(1, 10), st.integers(2, 50))
+@settings(**SETTINGS)
+def test_embedding_bag_padded_equals_ragged(b, lmax, v):
+    rng = np.random.default_rng(b * 100 + lmax * 7 + v)
+    table = jnp.asarray(rng.normal(size=(v, 8)).astype(np.float32))
+    lengths = rng.integers(1, lmax + 1, b)
+    ids = np.full((b, lmax), -1, np.int32)
+    flat, offs = [], [0]
+    for i, L in enumerate(lengths):
+        row = rng.integers(0, v, L)
+        ids[i, :L] = row
+        flat.extend(row.tolist())
+        offs.append(offs[-1] + L)
+    a = embedding_bag(table, jnp.asarray(ids), mode="sum")
+    r = embedding_bag_ragged(
+        table, jnp.asarray(np.array(flat, np.int32)), jnp.asarray(np.array(offs, np.int32))
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(r), rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(2, 30), st.integers(1, 10))
+@settings(**SETTINGS)
+def test_recall_at_k_properties(b, k):
+    rng = np.random.default_rng(b * 31 + k)
+    true = rng.integers(0, 1000, (b, k)).astype(np.int32)
+    assert recall_at_k(true, true) == 1.0
+    miss = true + 10_000
+    assert recall_at_k(miss, true) == 0.0
