@@ -41,6 +41,17 @@ def run():
         rows.append(dict(bench="fig7", dataset=name, algo="ipnsw+", knob=ef,
                          recall=round(recall_at_k(np.asarray(r.ids), gt), 4),
                          ms_per_query=round(dt / len(queries) * 1e3, 4)))
+
+    # Walk-backend trajectory: reference vs fused beam_step kernel on a small
+    # query slice (the pallas backend runs in interpret mode on CPU, so the
+    # slice is kept tiny; recall must match the reference row bit-for-bit).
+    qs, gts = q[:8], gt[:8]
+    for backend in ("reference", "pallas"):
+        r, dt = _timed(base.search, qs, 10, EFS[0], backend=backend, repeats=1)
+        rows.append(dict(bench="fig7", dataset=name, algo=f"ipnsw[{backend}]",
+                         knob=EFS[0],
+                         recall=round(recall_at_k(np.asarray(r.ids), gts), 4),
+                         ms_per_query=round(dt / len(qs) * 1e3, 4)))
     for nc in (100, 400, 1600):
         r, dt = _timed(lsh.search, q, 10, nc)
         rows.append(dict(bench="fig7", dataset=name, algo="simple-lsh", knob=nc,

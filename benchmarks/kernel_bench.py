@@ -1,11 +1,15 @@
 """Kernel micro-bench: exact-MIPS scan (the retrieval_cand hot path) — jnp
-backend wall time on CPU + analytic TPU roofline for the Pallas kernel.
+backend wall time on CPU + analytic TPU roofline for the Pallas kernel —
+plus the Algorithm-1 walk, reference backend vs the fused beam_step kernel.
 
-The Pallas kernel itself runs in interpret mode on CPU (orders of magnitude
-slower than compiled TPU — wall time meaningless), so this bench reports:
-  * jnp backend CPU µs/query (real measurement, sanity scaling)
-  * the kernel's analytic TPU time bound: N*d*4 bytes / 819 GB/s (item
-    streaming, the design's HBM-bound optimum) + MXU time at 197 TFLOP/s
+The Pallas kernels run in interpret mode on CPU (orders of magnitude slower
+than compiled TPU — interpret wall time is recorded for trajectory only), so
+this bench reports:
+  * jnp/reference backend CPU µs/query (real measurement, sanity scaling)
+  * pallas backend interpret-mode wall time (correctness-path cost record)
+  * analytic TPU time bounds: N*d*4 bytes / 819 GB/s (item streaming, the
+    design's HBM-bound optimum) + MXU time at 197 TFLOP/s; for the walk,
+    the per-step fused-kernel bound steps*(M*d*4/HBM) per query
 """
 import time
 
@@ -15,6 +19,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import QUICK, emit
 from repro.core import exact_topk
+from repro.core.build import build_graph
+from repro.core.search import STEP_BACKENDS, beam_search
 
 HBM = 819e9
 PEAK = 197e12
@@ -38,12 +44,55 @@ def run():
         t_mem = bytes_hbm / HBM
         t_mxu = flops / PEAK
         rows.append(dict(
-            bench="kernel_mips_topk", B=b, N=n, d=d,
+            bench="kernel_mips_topk", backend="jnp", B=b, N=n, d=d,
             cpu_us_per_query=round(dt / b * 1e6, 1),
             tpu_bound_us=round(max(t_mem, t_mxu) * 1e6, 1),
             bound="memory" if t_mem > t_mxu else "compute",
         ))
+    rows += walk_step_bench()
     emit(rows, header=True)
+    return rows
+
+
+def walk_step_bench():
+    """Algorithm-1 walk: reference step_fn vs the fused beam_step kernel.
+
+    Sizes are small because the pallas backend runs in interpret mode on CPU;
+    the row pair still pins the reference-vs-fused trajectory per release and
+    the analytic bound column gives the compiled-TPU expectation.
+    """
+    n, d, b, m = (500, 48, 4, 8) if QUICK else (2000, 64, 8, 8)
+    pool, steps = 16, 24
+    rng = np.random.default_rng(0)
+    items = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32) / np.sqrt(d))
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32) / np.sqrt(d))
+    g = build_graph(items, max_degree=m, ef_construction=16, insert_batch=256)
+    init = jnp.broadcast_to(g.entry[None, None], (b, 1)).astype(jnp.int32)
+    # fused step on TPU: M item rows at the 128-lane padded width the kernel
+    # actually streams, plus the adjacency row fetched twice (SMEM + VMEM)
+    dp = -(-d // 128) * 128
+    t_step = (m * dp * 4.0 + 2 * m * 4.0) / HBM
+    rows = []
+    for backend in STEP_BACKENDS:
+        def run_walk():
+            return beam_search(
+                g, q, init, pool_size=pool, max_steps=steps, k=10,
+                backend=backend,
+            )
+        r = run_walk()
+        jax.block_until_ready(r.ids)
+        t0 = time.perf_counter()
+        reps = 3 if backend == "reference" else 1
+        for _ in range(reps):
+            r = run_walk()
+            jax.block_until_ready(r.ids)
+        dt = (time.perf_counter() - t0) / reps
+        rows.append(dict(
+            bench="walk_step", backend=backend, B=b, N=n, d=d,
+            cpu_us_per_query=round(dt / b * 1e6, 1),
+            tpu_bound_us=round(int(r.steps) * t_step * 1e6, 3),
+            bound="memory",
+        ))
     return rows
 
 

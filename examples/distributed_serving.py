@@ -27,8 +27,9 @@ def main():
     index = build_sharded(items, shards, plus=True, max_degree=16,
                           ef_construction=32, insert_batch=512)
 
-    mesh = jax.make_mesh((shards,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((shards,), ("model",))
     print(f"mesh: {mesh}")
 
     ids, scores, evals = sharded_search(index, queries, mesh=mesh, k=k, ef=40)

@@ -1,0 +1,43 @@
+"""jax version-compat shims for the pinned jax (0.4.37).
+
+The codebase targets the modern surface (``jax.shard_map`` with
+``check_vma=``, mesh ``axis_types=``); on the pinned 0.4.x these live under
+``jax.experimental.shard_map`` with ``check_rep=``, and
+``jax.sharding.AxisType`` does not exist.  Centralizing the fallbacks here
+keeps every call site on the one modern spelling; bumping the jax pin means
+revisiting exactly this module.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5: explicit/auto axis types on meshes
+    from jax.sharding import AxisType
+except ImportError:  # pinned jax 0.4.x has neither AxisType nor the kwarg
+    AxisType = None
+
+
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh across jax versions: passes Auto axis_types when the
+    installed jax supports them, plain mesh otherwise."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        # check_vma is the renamed check_rep (replication checking).
+        return _shard_map_legacy(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma,
+        )

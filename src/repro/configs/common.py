@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.launch.mesh import batch_axes_of, data_parallelism
 from repro.models import gnn as gnn_mod
 from repro.models import layers as layers_mod
@@ -501,7 +503,7 @@ class RecsysArch:
                         mv, sel = jax.lax.top_k(allv, 100)
                         return mv, jnp.take_along_axis(alli, sel, axis=-1)
 
-                    vals, ids = jax.shard_map(
+                    vals, ids = shard_map(
                         body,
                         mesh=mesh,
                         in_specs=(P("model", None), P(None, None, None)),

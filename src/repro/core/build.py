@@ -166,7 +166,9 @@ def _bootstrap_neighbors(batch_items: jax.Array, max_degree: int):
     return ids, vals
 
 
-@functools.partial(jax.jit, static_argnames=("max_degree", "ef", "max_steps"))
+@functools.partial(
+    jax.jit, static_argnames=("max_degree", "ef", "max_steps", "backend")
+)
 def find_neighbors(
     graph: GraphIndex,
     batch_items: jax.Array,
@@ -174,6 +176,7 @@ def find_neighbors(
     max_degree: int,
     ef: int,
     max_steps: int,
+    backend: str = "reference",
 ):
     """Algorithm-1 search of the current graph for each batch item's top-M."""
     b = batch_items.shape[0]
@@ -185,6 +188,7 @@ def find_neighbors(
         pool_size=ef,
         max_steps=max_steps,
         k=max_degree,
+        backend=backend,
     )
     ids = jnp.where(res.scores > NEG_INF, res.ids, -1)
     return ids, res.scores
@@ -205,12 +209,15 @@ def build_graph(
     reverse_links: bool = True,
     max_steps: Optional[int] = None,
     neighbor_fn: Optional[Callable] = None,
+    backend: str = "reference",
     progress: bool = False,
 ) -> GraphIndex:
     """Build an NSW proximity graph for ``items`` under ``similarity``.
 
     ``neighbor_fn(graph, batch_items) -> (ids, scores)`` overrides the
     neighbor search — ip-NSW+ passes its own Algorithm-3-based finder.
+    ``backend`` selects the walk step backend for insertion searches
+    (see search.STEP_BACKENDS).
     """
     prepared = prepare_items(jnp.asarray(items), similarity)
     n = prepared.shape[0]
@@ -235,6 +242,7 @@ def build_graph(
                 max_degree=max_degree,
                 ef=ef_construction,
                 max_steps=steps,
+                backend=backend,
             )
         else:
             nbr, sc = neighbor_fn(graph, batch_items)

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.core.graph import GraphIndex
 from repro.core.search import beam_search
 
@@ -187,7 +189,7 @@ def sharded_search(
         return out_ids, out_scores, total_evals
 
     spec_idx = jax.tree.map(lambda _: P(axis), index)
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(spec_idx, P(axis), P()),

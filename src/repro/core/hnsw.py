@@ -39,15 +39,16 @@ def assign_levels(n: int, max_degree: int, seed: int = 0, max_levels: int = 6):
     return np.minimum(lv, max_levels - 1)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "ef", "max_steps"))
-def _level0_search(graph, queries, init, *, k, ef, max_steps):
+@functools.partial(jax.jit, static_argnames=("k", "ef", "max_steps", "backend"))
+def _level0_search(graph, queries, init, *, k, ef, max_steps, backend="reference"):
     return beam_search(graph, queries, init, pool_size=max(ef, k),
-                       max_steps=max_steps, k=k)
+                       max_steps=max_steps, k=k, backend=backend)
 
 
-@functools.partial(jax.jit, static_argnames=("max_steps",))
-def _greedy_descend(graph, queries, init, *, max_steps):
-    r = beam_search(graph, queries, init, pool_size=1, max_steps=max_steps, k=1)
+@functools.partial(jax.jit, static_argnames=("max_steps", "backend"))
+def _greedy_descend(graph, queries, init, *, max_steps, backend="reference"):
+    r = beam_search(graph, queries, init, pool_size=1, max_steps=max_steps, k=1,
+                    backend=backend)
     return r.ids[:, 0], r.evals
 
 
@@ -60,6 +61,7 @@ class HierarchicalIpNSW:
     ef_construction: int = 64
     insert_batch: int = 256
     seed: int = 0
+    backend: str = "reference"  # walk step backend (search.STEP_BACKENDS)
     levels: List[GraphIndex] = field(default_factory=list)
     ids: List[np.ndarray] = field(default_factory=list)       # level -> global ids
     inv: List[np.ndarray] = field(default_factory=list)       # global -> local (-1)
@@ -83,6 +85,7 @@ class HierarchicalIpNSW:
                     self.ef_construction // 4, 8
                 ),
                 insert_batch=self.insert_batch,
+                backend=self.backend,
                 progress=progress and level == 0,
             )
             inv = np.full(n, -1, np.int32)
@@ -93,8 +96,10 @@ class HierarchicalIpNSW:
         return self
 
     def search(self, queries: jax.Array, k: int = 10, ef: int = 64,
-               max_steps: Optional[int] = None) -> SearchResult:
+               max_steps: Optional[int] = None,
+               backend: Optional[str] = None) -> SearchResult:
         assert self.levels, "call build() first"
+        backend = backend if backend is not None else self.backend
         b = queries.shape[0]
         extra_evals = jnp.zeros((b,), jnp.int32)
 
@@ -109,7 +114,7 @@ class HierarchicalIpNSW:
                 local = jnp.where(local >= 0, local, g.entry)
                 init = local[:, None].astype(jnp.int32)
             best_local, ev = _greedy_descend(
-                g, queries, init, max_steps=4 * self.max_degree
+                g, queries, init, max_steps=4 * self.max_degree, backend=backend
             )
             cur_global = jnp.asarray(self.ids[level])[jnp.maximum(best_local, 0)]
             extra_evals = extra_evals + ev
@@ -120,7 +125,8 @@ class HierarchicalIpNSW:
         else:
             init0 = cur_global[:, None].astype(jnp.int32)  # level0 local == global
         steps = max_steps if max_steps is not None else 2 * ef
-        res = _level0_search(g0, queries, init0, k=k, ef=ef, max_steps=steps)
+        res = _level0_search(g0, queries, init0, k=k, ef=ef, max_steps=steps,
+                             backend=backend)
         return SearchResult(
             ids=res.ids,
             scores=res.scores,

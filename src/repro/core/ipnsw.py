@@ -18,12 +18,23 @@ from repro.core.search import SearchResult, beam_search
 from repro.core.similarity import Similarity
 
 
-@functools.partial(jax.jit, static_argnames=("pool_size", "max_steps", "k"))
-def _search(graph: GraphIndex, queries, *, pool_size: int, max_steps: int, k: int):
+@functools.partial(
+    jax.jit, static_argnames=("pool_size", "max_steps", "k", "backend")
+)
+def _search(
+    graph: GraphIndex,
+    queries,
+    *,
+    pool_size: int,
+    max_steps: int,
+    k: int,
+    backend: str = "reference",
+):
     b = queries.shape[0]
     init = jnp.broadcast_to(graph.entry[None, None], (b, 1)).astype(jnp.int32)
     return beam_search(
-        graph, queries, init, pool_size=pool_size, max_steps=max_steps, k=k
+        graph, queries, init, pool_size=pool_size, max_steps=max_steps, k=k,
+        backend=backend,
     )
 
 
@@ -32,13 +43,15 @@ class IpNSW:
     """Inner-product NSW index.
 
     build parameters mirror the paper: ``max_degree`` = M, ``ef_construction``
-    = candidate-pool size l used during insertion.
+    = candidate-pool size l used during insertion.  ``backend`` selects the
+    walk step implementation ("reference" | "pallas", see search.py).
     """
 
     max_degree: int = 16
     ef_construction: int = 64
     insert_batch: int = 128
     reverse_links: bool = True
+    backend: str = "reference"
     graph: Optional[GraphIndex] = None
 
     def build(self, items: jax.Array, progress: bool = False) -> "IpNSW":
@@ -49,6 +62,7 @@ class IpNSW:
             ef_construction=self.ef_construction,
             insert_batch=self.insert_batch,
             reverse_links=self.reverse_links,
+            backend=self.backend,
             progress=progress,
         )
         return self
@@ -59,9 +73,11 @@ class IpNSW:
         k: int = 10,
         ef: int = 64,
         max_steps: Optional[int] = None,
+        backend: Optional[str] = None,
     ) -> SearchResult:
         assert self.graph is not None, "call build() first"
         steps = max_steps if max_steps is not None else 2 * ef
         return _search(
-            self.graph, queries, pool_size=max(ef, k), max_steps=steps, k=k
+            self.graph, queries, pool_size=max(ef, k), max_steps=steps, k=k,
+            backend=backend if backend is not None else self.backend,
         )

@@ -64,7 +64,9 @@ def _seed_from_angular(ip_adj: jax.Array, ang_ids: jax.Array) -> jax.Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "ef", "ang_ef", "k_angular", "max_steps", "ang_max_steps"),
+    static_argnames=(
+        "k", "ef", "ang_ef", "k_angular", "max_steps", "ang_max_steps", "backend"
+    ),
 )
 def _search_plus(
     ang_graph: GraphIndex,
@@ -77,6 +79,7 @@ def _search_plus(
     k_angular: int,
     max_steps: int,
     ang_max_steps: int,
+    backend: str = "reference",
 ) -> PlusResult:
     b = queries.shape[0]
     init_a = jnp.broadcast_to(ang_graph.entry[None, None], (b, 1)).astype(jnp.int32)
@@ -89,6 +92,7 @@ def _search_plus(
         pool_size=max(ang_ef, k_angular),
         max_steps=ang_max_steps,
         k=k_angular,
+        backend=backend,
     )
     seeds = _seed_from_angular(ip_graph.adj, ang.ids)
     ip = beam_search(
@@ -98,6 +102,7 @@ def _search_plus(
         pool_size=max(ef, k),
         max_steps=max_steps,
         k=k,
+        backend=backend,
     )
     return PlusResult(
         ids=ip.ids,
@@ -126,6 +131,7 @@ class IpNSWPlus:
     k_angular: int = 10           # k' — angular results whose G_s edges seed C
     insert_batch: int = 128
     reverse_links: bool = True
+    backend: str = "reference"    # walk step backend (search.STEP_BACKENDS)
     ang_graph: Optional[GraphIndex] = field(default=None)
     ip_graph: Optional[GraphIndex] = field(default=None)
 
@@ -167,6 +173,7 @@ class IpNSWPlus:
                 max_degree=self.ang_degree,
                 ef=max(self.ang_ef, self.ang_degree),
                 max_steps=ang_steps,
+                backend=self.backend,
             )
             ang = commit_batch(
                 ang, bids, a_nbr, a_sc, ang_norms, reverse_links=self.reverse_links
@@ -181,6 +188,7 @@ class IpNSWPlus:
                 max_degree=self.max_degree,
                 ef=self.ef_construction,
                 max_steps=ip_steps,
+                backend=self.backend,
             )
             ip = commit_batch(
                 ip, bids, g_nbr, g_sc, norms, reverse_links=self.reverse_links
@@ -203,6 +211,7 @@ class IpNSWPlus:
         ang_ef: Optional[int] = None,
         k_angular: Optional[int] = None,
         max_steps: Optional[int] = None,
+        backend: Optional[str] = None,
     ) -> PlusResult:
         assert self.ip_graph is not None, "call build() first"
         ang_ef = ang_ef if ang_ef is not None else self.ang_ef
@@ -218,10 +227,13 @@ class IpNSWPlus:
             k_angular=k_ang,
             max_steps=steps,
             ang_max_steps=2 * max(ang_ef, k_ang),
+            backend=backend if backend is not None else self.backend,
         )
 
 
-@functools.partial(jax.jit, static_argnames=("max_degree", "ef", "max_steps"))
+@functools.partial(
+    jax.jit, static_argnames=("max_degree", "ef", "max_steps", "backend")
+)
 def _find_ip_neighbors_seeded(
     ip_graph: GraphIndex,
     batch_items: jax.Array,
@@ -230,6 +242,7 @@ def _find_ip_neighbors_seeded(
     max_degree: int,
     ef: int,
     max_steps: int,
+    backend: str = "reference",
 ):
     """§4.2 insertion: find an item's G_s neighbors by the ip-NSW+ search
     (angular-seeded walk) instead of a cold entry-vertex walk."""
@@ -246,6 +259,7 @@ def _find_ip_neighbors_seeded(
         pool_size=ef,
         max_steps=max_steps,
         k=max_degree,
+        backend=backend,
     )
     ids = jnp.where(res.scores > NEG_INF, res.ids, -1)
     return ids, res.scores

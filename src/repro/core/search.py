@@ -17,6 +17,15 @@ Per-query state:
 
 Termination matches Algorithm 1: a query is done when every entry of its pool
 is checked; the loop exits when all queries are done or ``max_steps`` is hit.
+
+Step backends (``backend=``, see DESIGN.md):
+  "reference" — the loop body is ``beam_step_ref``: ~6 separate XLA ops with
+                HBM round-trips between gather, score, mask and merge.
+  "pallas"    — the loop body is the fused ``beam_step`` kernel: the whole
+                iteration runs per query tile in VMEM.  Off-TPU the kernel
+                auto-falls back to interpret mode (bit-identical ids, CPU
+                speed), so the same code path is testable everywhere.
+Both backends share seeding/termination and return identical result ids.
 """
 from __future__ import annotations
 
@@ -29,6 +38,8 @@ from repro.core.graph import GraphIndex
 from repro.core.similarity import gather_scores
 
 NEG_INF = jnp.float32(-jnp.inf)
+
+STEP_BACKENDS = ("reference", "pallas")
 
 
 class SearchResult(NamedTuple):
@@ -60,6 +71,69 @@ def _dedup_ids(ids: jax.Array) -> jax.Array:
     return jnp.where(dup, -1, s)
 
 
+def make_step_fn(
+    backend: str,
+    queries: jax.Array,
+    adj: jax.Array,
+    items: jax.Array,
+    *,
+    score_fn=gather_scores,
+    interpret: Optional[bool] = None,
+):
+    """Resolve ``backend`` to a step function over the per-query walk state:
+
+        step_fn(pool_ids, pool_scores, pool_checked, visited, done)
+            -> StepResult
+
+    This is the extension point every walk kernel slots into — later fused
+    kernels (distance pruning, batched build) register the same shape.
+    ``interpret=None`` auto-falls back to Pallas interpret mode off-TPU.
+    """
+    # Deferred import: kernels.beam_step.ref reuses core.similarity, so a
+    # module-level import here would be circular through core/__init__.
+    from repro.kernels.beam_step import beam_step, beam_step_ref
+
+    if backend == "reference":
+
+        def step_fn(pool_ids, pool_scores, pool_checked, visited, done):
+            return beam_step_ref(
+                pool_ids, pool_scores, pool_checked, visited, done,
+                queries, adj, items, score_fn=score_fn,
+            )
+
+        return step_fn
+
+    if backend == "pallas":
+        if score_fn is not gather_scores:
+            raise ValueError(
+                "backend='pallas' scores with the fused kernel's inner "
+                "product and cannot honor a custom score_fn; use "
+                "backend='reference' for custom similarities"
+            )
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        # Pre-pad once, outside the while_loop, so the per-step pads inside
+        # the jit'd kernel wrapper fold away (zero-padding keeps fp32 inner
+        # products bit-identical).  _round_up is the kernel wrapper's own
+        # lane-width rule, so the two stay in lockstep.
+        from repro.kernels.beam_step.ops import _round_up
+
+        d = items.shape[1]
+        dp = _round_up(d, 128)
+        q_pad = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, dp - d)))
+        x_pad = jnp.pad(items.astype(jnp.float32), ((0, 0), (0, dp - d)))
+
+        def step_fn(pool_ids, pool_scores, pool_checked, visited, done):
+            return beam_step(
+                pool_ids, pool_scores, pool_checked, visited, done,
+                q_pad, adj, x_pad, interpret=interpret,
+            )
+
+        return step_fn
+
+    raise ValueError(f"backend must be one of {STEP_BACKENDS}, got {backend!r}")
+
+
 def beam_search(
     graph: GraphIndex,
     queries: jax.Array,
@@ -69,6 +143,8 @@ def beam_search(
     max_steps: int,
     k: int,
     score_fn=gather_scores,
+    backend: str = "reference",
+    interpret: Optional[bool] = None,
 ) -> SearchResult:
     """Run the batched walk.
 
@@ -77,6 +153,7 @@ def beam_search(
     init_ids: [B, S] int32 seed ids (-1 padded, duplicates allowed).  For
               plain ip-NSW this is the entry vertex; for ip-NSW+ it is the
               ip-graph neighborhood of the angular search results (Alg 3).
+    backend:  "reference" | "pallas" — which step_fn runs the loop body.
     """
     adj, items = graph.adj, graph.items
     B, S = init_ids.shape
@@ -88,8 +165,6 @@ def beam_search(
     valid0 = init_ids >= 0
     scores0 = jnp.where(valid0, score_fn(queries, items, init_ids), NEG_INF)
     evals0 = valid0.sum(axis=-1).astype(jnp.int32)
-
-    #
 
     # Seed pool = top-L of the seeds (sorted desc; empty slots are checked).
     top0, idx0 = jax.lax.top_k(scores0, min(L, S))
@@ -115,55 +190,26 @@ def beam_search(
         step=jnp.zeros((), jnp.int32),
     )
 
-    rows = jnp.arange(B)
+    step_fn = make_step_fn(
+        backend, queries, adj, items, score_fn=score_fn, interpret=interpret
+    )
 
     def cond(st: _State):
         return (st.step < max_steps) & jnp.any(~st.done)
 
     def body(st: _State) -> _State:
-        unchecked = (~st.pool_checked) & (st.pool_ids >= 0)
-        has_unchecked = unchecked.any(axis=-1)
-        done = st.done | ~has_unchecked
-        upd = ~done  # queries that take a step this iteration
-
-        # Pool is sorted desc => first unchecked slot is the best unchecked.
-        cur_slot = jnp.argmax(unchecked, axis=-1)
-        cur_id = st.pool_ids[rows, cur_slot]
-        cur_id = jnp.where(upd, cur_id, graph.entry)
-
-        checked = st.pool_checked | (
-            jax.nn.one_hot(cur_slot, L, dtype=bool) & upd[:, None]
-        )
-
-        nbrs = adj[jnp.maximum(cur_id, 0)]  # [B, M]
-        valid = (nbrs >= 0) & upd[:, None]
-        seen = (nbrs[:, :, None] == st.visited[:, None, :]).any(axis=-1)
-        valid &= ~seen
-
-        nbr_scores = score_fn(queries, items, nbrs)
-        nbr_scores = jnp.where(valid, nbr_scores, NEG_INF)
-        nbr_ids = jnp.where(valid, nbrs, -1).astype(jnp.int32)
-        evals = st.evals + valid.sum(axis=-1).astype(jnp.int32)
-
+        res = step_fn(st.pool_ids, st.pool_scores, st.pool_checked,
+                      st.visited, st.done)
         visited = jax.lax.dynamic_update_slice(
-            st.visited, nbr_ids, (0, S + st.step * M)
+            st.visited, res.nbr_ids, (0, S + st.step * M)
         )
-
-        cand_ids = jnp.concatenate([st.pool_ids, nbr_ids], axis=-1)
-        cand_scores = jnp.concatenate([st.pool_scores, nbr_scores], axis=-1)
-        cand_checked = jnp.concatenate([checked, ~valid], axis=-1)
-
-        new_scores, sel = jax.lax.top_k(cand_scores, L)
-        new_ids = jnp.take_along_axis(cand_ids, sel, axis=-1)
-        new_checked = jnp.take_along_axis(cand_checked, sel, axis=-1)
-
         return _State(
-            pool_ids=new_ids,
-            pool_scores=new_scores,
-            pool_checked=new_checked,
+            pool_ids=res.pool_ids,
+            pool_scores=res.pool_scores,
+            pool_checked=res.pool_checked,
             visited=visited,
-            evals=evals,
-            done=done,
+            evals=st.evals + res.n_scored,
+            done=res.done,
             step=st.step + 1,
         )
 

@@ -4,4 +4,6 @@ on CPU; TPU is the compile target).
   mips_topk    — tiled exact-MIPS linear scan + streaming top-k (MXU)
   gather_score — scalar-prefetch fused row-gather + dot (beam expansion)
   topk_merge   — in-VMEM candidate-pool merge (Algorithm 1 line 7-8)
+  beam_step    — fused full Algorithm-1 iteration (select + gather + dedup +
+                 score + merge in VMEM); the "pallas" walk backend (DESIGN §3)
 """

@@ -1,0 +1,181 @@
+"""Fused beam-step Pallas TPU kernel — one full Algorithm-1 iteration per
+query in VMEM, no HBM round-trip between stages.
+
+Composes the two existing building blocks into a single kernel:
+  * gather_score's data-dependent row gather (here via explicit async DMA,
+    because the gathered ids are *computed inside* the kernel from the pool
+    state, so a scalar-prefetch BlockSpec cannot express them), and
+  * topk_merge's L-pass masked-max selection network (``masked_top_l``).
+
+Per grid step (one query):
+  1. select the best unchecked pool slot (pool sorted desc => first unchecked)
+     and mark it checked;
+  2. DMA the adjacency row ``adj[cur]`` HBM->SMEM (scalar ids for the gather
+     loop) and HBM->VMEM (vector lanes for the masks);
+  3. DMA the M neighbor item rows HBM->VMEM — all started before any wait, so
+     on TPU the fetches overlap;
+  4. mask ids against the visited ring buffer, dot the rows with the query
+     (MXU), and merge into the sorted pool — all without leaving VMEM.
+
+Only the new pool state, the masked neighbor ids and two scalars per query go
+back to HBM.  The XLA reference path materializes the gathered [B, M, d]
+rows, the [B, M, V] dedup mask and the [B, L+M] merge candidates in HBM
+between ~6 separate ops; here they live and die in registers/VMEM.
+
+VMEM budget per query: M*dp*4 (gathered rows) + (L+V+3M) ints/floats —
+~9 KB for M=16, dp=128, L=64, V=2k; far under the ~16 MB/core limit, so bb
+could later tile many queries per step.
+
+Ids must be valid graph state (pool ids >= -1, adjacency -1 padded); the
+caller contract matches beam_step_ref bit-for-bit on result ids.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.topk_merge.kernel import NEG_INF, masked_top_l
+
+
+def _beam_step_kernel(
+    pi_ref, ps_ref, pc_ref, dn_ref, vis_ref, q_ref,   # VMEM-blocked inputs
+    adj_hbm, items_hbm,                               # whole arrays, ANY/HBM
+    oi_ref, os_ref, oc_ref, onb_ref, odn_ref, onv_ref,
+    adj_smem, adj_vmem, rows_ref, sems,
+    *,
+    l: int,
+    m: int,
+):
+    pool_ids = pi_ref[...]                 # [1, L] int32
+    pool_scores = ps_ref[...]              # [1, L] fp32
+    pool_checked = pc_ref[...] != 0        # [1, L] bool
+
+    # --- 1. select best unchecked slot --------------------------------------
+    unchecked = (~pool_checked) & (pool_ids >= 0)
+    done = (dn_ref[0, 0] != 0) | ~jnp.any(unchecked)
+    upd = ~done
+    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (1, l), 1)
+    cur_slot = jnp.min(jnp.where(unchecked, slot_iota, l))
+    hit = unchecked & (slot_iota == cur_slot)
+    cur = jnp.maximum(jnp.where(upd, jnp.max(jnp.where(hit, pool_ids, -1)), 0), 0)
+    checked = pool_checked | (hit & upd)
+
+    # Done queries skip all DMA: their neighbor results are fully masked by
+    # ``upd`` below, so stale/uninitialized scratch contents are never
+    # observable, and the walk stops streaming HBM for early finishers while
+    # the batch waits on stragglers.
+    @pl.when(upd)
+    def _fetch():
+        # --- 2. adjacency row: HBM -> SMEM (scalars) + VMEM (lanes) ---------
+        adj_s = pltpu.make_async_copy(
+            adj_hbm.at[pl.ds(cur, 1), :], adj_smem, sems.at[m]
+        )
+        adj_v = pltpu.make_async_copy(
+            adj_hbm.at[pl.ds(cur, 1), :], adj_vmem, sems.at[m + 1]
+        )
+        adj_s.start()
+        adj_v.start()
+        adj_s.wait()
+        adj_v.wait()
+
+        # --- 3. gather the M neighbor rows (start all, then wait all) -------
+        def _row_copy(j):
+            nid = jnp.maximum(adj_smem[0, j], 0)
+            return pltpu.make_async_copy(
+                items_hbm.at[pl.ds(nid, 1), :], rows_ref.at[pl.ds(j, 1), :],
+                sems.at[j],
+            )
+
+        jax.lax.fori_loop(0, m, lambda j, c: (_row_copy(j).start(), c)[1], 0)
+        jax.lax.fori_loop(0, m, lambda j, c: (_row_copy(j).wait(), c)[1], 0)
+
+    # --- 4. dedup-mask, score, merge — all in VMEM --------------------------
+    nbrs = adj_vmem[...]                   # [1, M] int32
+    seen = (nbrs[:, :, None] == vis_ref[...][:, None, :]).any(axis=-1)
+    valid = (nbrs >= 0) & upd & ~seen
+
+    scores = jax.lax.dot_general(
+        q_ref[...], rows_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                      # [1, M]
+    nbr_scores = jnp.where(valid, scores, NEG_INF)
+    nbr_ids = jnp.where(valid, nbrs, -1)
+
+    cand_s = jnp.concatenate([pool_scores, nbr_scores], axis=1)
+    cand_i = jnp.concatenate([pool_ids, nbr_ids], axis=1)
+    cand_c = jnp.concatenate(
+        [checked.astype(jnp.int32), (~valid).astype(jnp.int32)], axis=1
+    )
+    out_s, out_i, out_c = masked_top_l(cand_s, cand_i, cand_c, l)
+
+    os_ref[...] = out_s
+    oi_ref[...] = out_i
+    oc_ref[...] = out_c
+    onb_ref[...] = nbr_ids
+    odn_ref[0, 0] = done.astype(jnp.int32)
+    onv_ref[0, 0] = jnp.sum(valid.astype(jnp.int32))
+
+
+def beam_step_pallas(
+    pool_ids: jax.Array,      # [B, L] int32
+    pool_scores: jax.Array,   # [B, L] fp32
+    pool_checked: jax.Array,  # [B, L] int32 0/1
+    done: jax.Array,          # [B, 1] int32 0/1
+    visited: jax.Array,       # [B, V] int32 (-1 padded)
+    queries: jax.Array,       # [B, dp] fp32, dp a lane multiple
+    adj: jax.Array,           # [N, M] int32 (-1 padded)
+    items: jax.Array,         # [N, dp] fp32
+    *,
+    interpret: bool = True,
+):
+    """One fused Algorithm-1 iteration for every query.  Returns
+    (pool_ids, pool_scores, pool_checked, nbr_ids, done, n_scored) with the
+    pool sorted desc and ids bit-identical to beam_step_ref."""
+    b, l = pool_ids.shape
+    v = visited.shape[1]
+    dp = queries.shape[1]
+    m = adj.shape[1]
+
+    spec_l = pl.BlockSpec((1, l), lambda i: (i, 0))
+    spec_1 = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    spec_any = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+
+    return pl.pallas_call(
+        functools.partial(_beam_step_kernel, l=l, m=m),
+        grid=(b,),
+        in_specs=[
+            spec_l,                                   # pool_ids
+            spec_l,                                   # pool_scores
+            spec_l,                                   # pool_checked
+            spec_1,                                   # done
+            pl.BlockSpec((1, v), lambda i: (i, 0)),   # visited
+            pl.BlockSpec((1, dp), lambda i: (i, 0)),  # query
+            spec_any,                                 # adj (HBM)
+            spec_any,                                 # items (HBM)
+        ],
+        out_specs=(
+            spec_l, spec_l, spec_l,
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            spec_1, spec_1,
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, l), jnp.int32),
+            jax.ShapeDtypeStruct((b, l), jnp.float32),
+            jax.ShapeDtypeStruct((b, l), jnp.int32),
+            jax.ShapeDtypeStruct((b, m), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ),
+        scratch_shapes=[
+            pltpu.SMEM((1, m), jnp.int32),
+            pltpu.VMEM((1, m), jnp.int32),
+            pltpu.VMEM((m, dp), jnp.float32),
+            pltpu.SemaphoreType.DMA((m + 2,)),
+        ],
+        interpret=interpret,
+    )(pool_ids, pool_scores, pool_checked, done, visited, queries, adj, items)

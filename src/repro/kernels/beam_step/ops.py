@@ -1,0 +1,61 @@
+"""jit'd wrapper for beam_step: pads d to the 128 lane width, converts the
+bool/int flag layouts, and exposes the beam_step_ref signature so
+``core.search.beam_search`` can dispatch to it as a ``step_fn``.
+
+Padding note: zero-padding the feature axis leaves fp32 inner products
+bit-identical, so the wrapper is a drop-in even for odd d; callers on the hot
+path (the walk loop) pre-pad queries/items once outside the ``while_loop`` so
+the per-step pads here fold away to no-ops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.beam_step.kernel import beam_step_pallas
+from repro.kernels.beam_step.ref import StepResult
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def beam_step(
+    pool_ids: jax.Array,      # [B, L] int32
+    pool_scores: jax.Array,   # [B, L] fp32
+    pool_checked: jax.Array,  # [B, L] bool
+    visited: jax.Array,       # [B, V] int32
+    done: jax.Array,          # [B] bool
+    queries: jax.Array,       # [B, d]
+    adj: jax.Array,           # [N, M] int32
+    items: jax.Array,         # [N, d]
+    *,
+    interpret: bool = True,
+) -> StepResult:
+    """Drop-in for beam_step_ref backed by the fused Pallas kernel."""
+    d = queries.shape[-1]
+    dp = _round_up(d, 128)
+    q = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, dp - d)))
+    x = jnp.pad(items.astype(jnp.float32), ((0, 0), (0, dp - d)))
+    oi, os, oc, onb, odn, onv = beam_step_pallas(
+        pool_ids.astype(jnp.int32),
+        pool_scores.astype(jnp.float32),
+        pool_checked.astype(jnp.int32),
+        done.astype(jnp.int32)[:, None],
+        visited.astype(jnp.int32),
+        q,
+        adj.astype(jnp.int32),
+        x,
+        interpret=interpret,
+    )
+    return StepResult(
+        pool_ids=oi,
+        pool_scores=os,
+        pool_checked=oc != 0,
+        nbr_ids=onb,
+        done=odn[:, 0] != 0,
+        n_scored=onv[:, 0],
+    )

@@ -1,0 +1,91 @@
+"""Pure-jnp oracle for beam_step — one Algorithm-1 iteration, extracted
+verbatim from the original ``core.search.beam_search`` loop body.
+
+This IS the reference backend of ``beam_search``: the walk loop calls it
+through the ``step_fn`` dispatch, so the oracle and the production reference
+path cannot drift apart.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.similarity import gather_scores
+
+# Plain Python float, not jnp.float32: this module is imported lazily from
+# inside jit traces (search.make_step_fn), where creating a jax value at
+# module scope would leak a tracer.
+NEG_INF = float("-inf")
+
+
+class StepResult(NamedTuple):
+    """State delta of one walk iteration (visited/evals updates are applied
+    by the caller, which owns the ring-buffer offset)."""
+
+    pool_ids: jax.Array      # [B, L] int32, sorted desc by score
+    pool_scores: jax.Array   # [B, L] fp32
+    pool_checked: jax.Array  # [B, L] bool
+    nbr_ids: jax.Array       # [B, M] int32 newly-scored ids (-1 masked)
+    done: jax.Array          # [B] bool (sticky)
+    n_scored: jax.Array      # [B] int32 similarity evaluations this step
+
+
+def beam_step_ref(
+    pool_ids: jax.Array,
+    pool_scores: jax.Array,
+    pool_checked: jax.Array,
+    visited: jax.Array,
+    done: jax.Array,
+    queries: jax.Array,
+    adj: jax.Array,
+    items: jax.Array,
+    *,
+    score_fn=gather_scores,
+) -> StepResult:
+    """Select the best unchecked pool slot, expand its adjacency row, mask
+    visited/invalid neighbors, score the rest, and merge into the pool."""
+    B, L = pool_ids.shape
+    rows = jnp.arange(B)
+
+    unchecked = (~pool_checked) & (pool_ids >= 0)
+    has_unchecked = unchecked.any(axis=-1)
+    new_done = done | ~has_unchecked
+    upd = ~new_done  # queries that take a step this iteration
+
+    # Pool is sorted desc => first unchecked slot is the best unchecked.
+    cur_slot = jnp.argmax(unchecked, axis=-1)
+    cur_id = pool_ids[rows, cur_slot]
+    cur_id = jnp.maximum(jnp.where(upd, cur_id, 0), 0)
+
+    checked = pool_checked | (
+        jax.nn.one_hot(cur_slot, L, dtype=bool) & upd[:, None]
+    )
+
+    nbrs = adj[cur_id]  # [B, M]
+    valid = (nbrs >= 0) & upd[:, None]
+    seen = (nbrs[:, :, None] == visited[:, None, :]).any(axis=-1)
+    valid &= ~seen
+
+    nbr_scores = score_fn(queries, items, nbrs)
+    nbr_scores = jnp.where(valid, nbr_scores, NEG_INF)
+    nbr_ids = jnp.where(valid, nbrs, -1).astype(jnp.int32)
+    n_scored = valid.sum(axis=-1).astype(jnp.int32)
+
+    cand_ids = jnp.concatenate([pool_ids, nbr_ids], axis=-1)
+    cand_scores = jnp.concatenate([pool_scores, nbr_scores], axis=-1)
+    cand_checked = jnp.concatenate([checked, ~valid], axis=-1)
+
+    new_scores, sel = jax.lax.top_k(cand_scores, L)
+    new_ids = jnp.take_along_axis(cand_ids, sel, axis=-1)
+    new_checked = jnp.take_along_axis(cand_checked, sel, axis=-1)
+
+    return StepResult(
+        pool_ids=new_ids,
+        pool_scores=new_scores,
+        pool_checked=new_checked,
+        nbr_ids=nbr_ids,
+        done=new_done,
+        n_scored=n_scored,
+    )

@@ -20,26 +20,45 @@ from jax.experimental import pallas as pl
 NEG_INF = float("-inf")
 
 
+def masked_top_l(cand_s, cand_i, cand_c, l: int):
+    """Select the top-``l`` of ``[B, C]`` score rows with two int payloads.
+
+    The L-pass masked-max network matches ``lax.top_k`` tie-breaking exactly
+    (first occurrence wins), so callers get bit-identical ids to the jnp
+    oracle.  Picked slots are excluded by an availability mask rather than by
+    overwriting their score with -inf: real candidate pools legitimately hold
+    -inf scores (empty/-1 slots), and overwriting would tie them with the
+    already-picked slots and re-emit a picked payload instead of advancing to
+    the first unpicked slot.  Statically unrolled — lowers to VPU
+    compare/select trees; also the merge stage of the fused beam_step kernel.
+    """
+    c = cand_s.shape[1]
+    col = jax.lax.broadcasted_iota(jnp.int32, cand_s.shape, 1)
+    avail = jnp.ones(cand_s.shape, dtype=bool)
+    out_s, out_i, out_c = [], [], []
+    for _ in range(l):
+        m = jnp.max(jnp.where(avail, cand_s, NEG_INF), axis=1)
+        tied = avail & (cand_s == m[:, None])
+        amax = jnp.min(jnp.where(tied, col, c), axis=1)
+        hit = col == amax[:, None]
+        out_s.append(m)
+        out_i.append(jnp.max(jnp.where(hit, cand_i, -1), axis=1))
+        out_c.append(jnp.max(jnp.where(hit, cand_c, 0), axis=1))
+        avail &= ~hit
+    return (
+        jnp.stack(out_s, axis=1),
+        jnp.stack(out_i, axis=1),
+        jnp.stack(out_c, axis=1),
+    )
+
+
 def _merge_kernel(
     ps_ref, pi_ref, pc_ref, ns_ref, ni_ref, nc_ref, os_ref, oi_ref, oc_ref, *, l: int
 ):
     cand_s = jnp.concatenate([ps_ref[...], ns_ref[...]], axis=1)
     cand_i = jnp.concatenate([pi_ref[...], ni_ref[...]], axis=1)
     cand_c = jnp.concatenate([pc_ref[...], nc_ref[...]], axis=1)
-
-    col = jax.lax.broadcasted_iota(jnp.int32, cand_s.shape, 1)
-    out_s, out_i, out_c = [], [], []
-    for _ in range(l):
-        m = jnp.max(cand_s, axis=1)
-        amax = jnp.argmax(cand_s, axis=1)
-        hit = col == amax[:, None]
-        out_s.append(m)
-        out_i.append(jnp.max(jnp.where(hit, cand_i, -1), axis=1))
-        out_c.append(jnp.max(jnp.where(hit, cand_c, 0), axis=1))
-        cand_s = jnp.where(hit, NEG_INF, cand_s)
-    os_ref[...] = jnp.stack(out_s, axis=1)
-    oi_ref[...] = jnp.stack(out_i, axis=1)
-    oc_ref[...] = jnp.stack(out_c, axis=1)
+    os_ref[...], oi_ref[...], oc_ref[...] = masked_top_l(cand_s, cand_i, cand_c, l)
 
 
 def topk_merge_pallas(

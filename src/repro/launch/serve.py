@@ -50,8 +50,9 @@ def main():
                               plus=args.index == "ipnsw_plus",
                               max_degree=16, ef_construction=32,
                               insert_batch=512)
-        mesh = jax.make_mesh((args.shards,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+
+        mesh = make_mesh_compat((args.shards,), ("model",))
         t0 = time.perf_counter()
         ids, _, evals = sharded_search(index, queries, mesh=mesh, k=args.k,
                                        ef=args.ef,

@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.models.layers import _dense_init
 
 ALL_AXES = ("pod", "data", "model")
@@ -193,7 +195,7 @@ def forward(params, graph, cfg: GNNConfig, mesh: Optional[jax.sharding.Mesh] = N
                 )
                 return hn_new, e_new
 
-            hn_new, e_new = jax.shard_map(
+            hn_new, e_new = shard_map(
                 body,
                 mesh=mesh,
                 in_specs=(

@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.models.layers import MODEL_AXIS, _dense_init
 
 NEG_INF = float("-inf")
@@ -188,7 +190,7 @@ def moe_apply(
             aux = jax.lax.pmean(aux, batch_axes)
             return out.reshape(xb.shape), aux
 
-        out, aux = jax.shard_map(
+        out, aux = shard_map(
             body,
             mesh=mesh,
             in_specs=(

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def _compress_one(g, e, axes):
     c = g.astype(jnp.float32) + e
@@ -57,7 +59,7 @@ def make_compressed_allreduce(mesh, axes: Sequence[str]):
         m, e2 = _compress_one(x[0], e[0], axes)
         return m[None], e2[None]
 
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axes), P(axes)),

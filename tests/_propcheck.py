@@ -1,0 +1,74 @@
+"""Minimal offline stand-in for the hypothesis subset these tests use.
+
+The container may not ship hypothesis; CI installs the real package.  This
+fallback implements only what the property tests need — ``given``/``settings``
+and the ``integers``/``floats``/``lists``/``flatmap``/``map`` strategies —
+drawing deterministically (example ``i`` always uses ``default_rng(i)``), so
+failures reproduce without shrinking.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Strategy:
+    def __init__(self, draw):
+        self.draw = draw  # draw(rng) -> value
+
+    def flatmap(self, f):
+        return Strategy(lambda rng: f(self.draw(rng)).draw(rng))
+
+    def map(self, f):
+        return Strategy(lambda rng: f(self.draw(rng)))
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        return Strategy(
+            lambda rng: [
+                elements.draw(rng)
+                for _ in range(int(rng.integers(min_size, max_size + 1)))
+            ]
+        )
+
+
+st = _Strategies()
+
+
+def settings(max_examples=25, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        n = getattr(fn, "_max_examples", 25)
+
+        def runner():
+            for i in range(n):
+                rng = np.random.default_rng(i)
+                vals = [s.draw(rng) for s in strats]
+                try:
+                    fn(*vals)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property falsified on example {i}: {vals!r}"
+                    ) from e
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+
+    return deco

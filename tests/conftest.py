@@ -4,6 +4,9 @@ import numpy as np
 import pytest
 
 
-@pytest.fixture(scope="session")
+@pytest.fixture()
 def rng():
+    # Function-scoped so every test draws the same stream regardless of which
+    # other tests ran before it (a session-scoped generator made draws depend
+    # on collection order).
     return np.random.default_rng(0)

@@ -32,7 +32,8 @@ items = jnp.asarray(rng.normal(size=(2048, 16)).astype(np.float32))
 queries = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
 idx = build_sharded(items, 8, plus=True, max_degree=8, ef_construction=16, insert_batch=256)
 ids_ref, sc_ref, ev_ref = sharded_search_reference(idx, queries, k=5, ef=16, plus=True)
-mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((8,), ("model",))
 ids_sm, sc_sm, ev_sm = sharded_search(idx, queries, mesh=mesh, k=5, ef=16, plus=True)
 assert np.array_equal(np.asarray(ids_ref), np.asarray(ids_sm))
 assert np.allclose(np.asarray(sc_ref), np.asarray(sc_sm))
@@ -50,7 +51,8 @@ def test_moe_sharded_matches_local():
         """
 import numpy as np, jax, jax.numpy as jnp
 from repro.models import moe as M
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 d, f, E = 16, 32, 8
 params, _ = M.moe_init(jax.random.PRNGKey(0), d, f, E, jnp.float32)
 x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8, d)).astype(np.float32))
@@ -72,7 +74,8 @@ def test_gnn_sharded_matches_local():
         """
 import numpy as np, jax, jax.numpy as jnp
 from repro.models import gnn as G
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 cfg = G.GNNConfig(n_layers=2, d_hidden=16, d_feat=8, d_edge=4, remat=False)
 params, _ = G.init(jax.random.PRNGKey(0), cfg)
 rng = np.random.default_rng(0)
@@ -102,7 +105,8 @@ def test_compressed_allreduce_error_feedback():
         """
 import numpy as np, jax, jax.numpy as jnp
 from repro.train.compress import make_compressed_allreduce
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((8,), ("data",))
 f = make_compressed_allreduce(mesh, ("data",))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.normal(size=(8, 512)).astype(np.float32))
@@ -132,7 +136,8 @@ import dataclasses
 from repro.models import transformer as tf, layers as L
 from repro.train import adamw_init, adamw_update
 
-mesh = jax.make_mesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 2), ("data", "model"))
 L.set_batch_axes_for_mesh(mesh)
 cfg = tf.TransformerConfig(name="t", n_layers=2, d_model=32, n_heads=4, n_kv=2,
     head_dim=8, d_ff=64, vocab=64, dtype=jnp.float32, attn_chunk=8, remat=False,

@@ -1,0 +1,208 @@
+"""Kernel parity matrix: every kernels/*/ops.py vs its ref.py oracle, in
+interpret mode, across shapes, odd (non-128-multiple) dims, and -1 padded
+ids — including the fused beam_step kernel (bit-exact ids vs the reference
+step and vs the reference full walk)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.beam_step import beam_step, beam_step_ref
+from repro.kernels.gather_score import gather_score, gather_score_ref
+from repro.kernels.mips_topk import mips_topk, mips_topk_ref
+from repro.kernels.topk_merge import topk_merge, topk_merge_ref
+
+
+# ---------------------------------------------------------------------------
+# gather_score / mips_topk / topk_merge: odd dims + -1 padded ids
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,n,d,w",
+    [(1, 40, 1, 1), (3, 100, 17, 5), (8, 333, 129, 9), (16, 512, 127, 16)],
+)
+def test_gather_score_odd_dims_and_padded_ids(rng, b, n, d, w):
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    ids = rng.integers(0, n, size=(b, w)).astype(np.int32)
+    ids[rng.random(size=ids.shape) < 0.3] = -1  # -1 padding slots
+    s = gather_score(q, x, jnp.asarray(ids))
+    # oracle contract: ids pre-clamped (kernel scores -1 against row 0)
+    r = gather_score_ref(q, x, jnp.asarray(np.maximum(ids, 0)))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(r), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,n,d,k", [(2, 130, 31, 3), (5, 999, 65, 7)])
+def test_mips_topk_odd_dims(rng, b, n, d, k):
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    vs, ids = mips_topk(q, x, k=k)
+    rvs, rids = mips_topk_ref(q, x, k=k)
+    np.testing.assert_allclose(np.asarray(vs), np.asarray(rvs), rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(ids), np.asarray(rids))
+
+
+@pytest.mark.parametrize("b,l,m", [(1, 1, 1), (3, 7, 5), (17, 33, 9)])
+def test_topk_merge_odd_shapes_and_padded_ids(rng, b, l, m):
+    pool_s = rng.normal(size=(b, l)).astype(np.float32)
+    pool_i = rng.integers(-1, 100, (b, l)).astype(np.int32)
+    pool_s[pool_i < 0] = -np.inf  # -1 slots carry -inf, like a real pool
+    new_s = rng.normal(size=(b, m)).astype(np.float32)
+    new_i = rng.integers(-1, 100, (b, m)).astype(np.int32)
+    new_s[new_i < 0] = -np.inf
+    args = (
+        pool_s, pool_i, rng.integers(0, 2, (b, l)).astype(np.int32),
+        new_s, new_i, rng.integers(0, 2, (b, m)).astype(np.int32),
+    )
+    out = topk_merge(*map(jnp.asarray, args))
+    ref = topk_merge_ref(*map(jnp.asarray, args))
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]))
+    assert np.array_equal(np.asarray(out[1]), np.asarray(ref[1]))
+    assert np.array_equal(np.asarray(out[2]), np.asarray(ref[2]))
+
+
+# ---------------------------------------------------------------------------
+# flash_attn: representative cell so the matrix covers every kernel pair
+# (tile-granular kernel — block shape sweeps live in test_kernels.py)
+# ---------------------------------------------------------------------------
+
+
+def test_flash_attn_parity_cell(rng):
+    from repro.kernels.flash_attn import flash_attention_head, flash_attention_head_ref
+
+    q = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+    out = flash_attention_head(q, k, v, bq=64, bk=64)
+    ref = flash_attention_head_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# beam_step: bit-exact single-step parity across the state-shape matrix
+# ---------------------------------------------------------------------------
+
+
+def _random_step_state(rng, b, l, m, v, n, d):
+    """A plausible mid-walk state: sorted pool with -1 padding, partially
+    checked slots, -1 padded adjacency and visited buffer, some done rows."""
+    items = rng.normal(size=(n, d)).astype(np.float32)
+    queries = rng.normal(size=(b, d)).astype(np.float32)
+    adj = rng.integers(-1, n, size=(n, m)).astype(np.int32)
+    pool_ids = rng.integers(-1, n, size=(b, l)).astype(np.int32)
+    pool_scores = np.where(
+        pool_ids >= 0, rng.normal(size=(b, l)), -np.inf
+    ).astype(np.float32)
+    order = np.argsort(-pool_scores, axis=1, kind="stable")
+    pool_ids = np.take_along_axis(pool_ids, order, 1)
+    pool_scores = np.take_along_axis(pool_scores, order, 1)
+    pool_checked = (rng.random(size=(b, l)) < 0.4) | (pool_ids < 0)
+    visited = rng.integers(-1, n, size=(b, v)).astype(np.int32)
+    done = rng.random(size=b) < 0.2
+    return tuple(
+        map(
+            jnp.asarray,
+            (pool_ids, pool_scores, pool_checked, visited, done, queries,
+             adj, items),
+        )
+    )
+
+
+@pytest.mark.parametrize(
+    "b,l,m,v,n,d",
+    [
+        (1, 1, 1, 1, 10, 1),        # degenerate everything
+        (2, 8, 4, 12, 64, 16),      # small round shapes
+        (5, 16, 8, 40, 200, 33),    # odd d
+        (3, 7, 5, 23, 111, 129),    # odd everything, d > 128
+        (9, 64, 16, 100, 500, 48),  # paper-scale pool/degree
+    ],
+)
+def test_beam_step_matches_ref_bit_exact(rng, b, l, m, v, n, d):
+    args = _random_step_state(rng, b, l, m, v, n, d)
+    r = beam_step_ref(*args)
+    p = beam_step(*args)
+    assert np.array_equal(np.asarray(r.pool_ids), np.asarray(p.pool_ids))
+    assert np.array_equal(np.asarray(r.pool_checked), np.asarray(p.pool_checked))
+    assert np.array_equal(np.asarray(r.nbr_ids), np.asarray(p.nbr_ids))
+    assert np.array_equal(np.asarray(r.done), np.asarray(p.done))
+    assert np.array_equal(np.asarray(r.n_scored), np.asarray(p.n_scored))
+    np.testing.assert_allclose(
+        np.asarray(r.pool_scores), np.asarray(p.pool_scores), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_beam_step_all_done_is_noop(rng):
+    args = _random_step_state(rng, 4, 8, 4, 16, 50, 8)
+    done = jnp.ones((4,), bool)
+    args = args[:4] + (done,) + args[5:]
+    r = beam_step_ref(*args)
+    p = beam_step(*args)
+    assert np.all(np.asarray(r.done)) and np.all(np.asarray(p.done))
+    assert np.array_equal(np.asarray(r.nbr_ids), np.full((4, 4), -1))
+    assert np.array_equal(np.asarray(p.nbr_ids), np.full((4, 4), -1))
+    assert np.all(np.asarray(p.n_scored) == 0)
+
+
+# ---------------------------------------------------------------------------
+# beam_step: full-walk parity — pallas backend vs reference beam_search
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n,d,b,md,pool,steps",
+    [(300, 16, 5, 8, 16, 32), (200, 33, 3, 4, 8, 16), (400, 20, 7, 8, 24, 40)],
+)
+def test_beam_search_backend_parity(rng, n, d, b, md, pool, steps):
+    from repro.core.build import build_graph
+    from repro.core.search import beam_search
+
+    items = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    g = build_graph(items, max_degree=md, ef_construction=16, insert_batch=64)
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    init = jnp.broadcast_to(g.entry[None, None], (b, 1)).astype(jnp.int32)
+    r1 = beam_search(g, q, init, pool_size=pool, max_steps=steps, k=5,
+                     backend="reference")
+    r2 = beam_search(g, q, init, pool_size=pool, max_steps=steps, k=5,
+                     backend="pallas")
+    assert np.array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    assert np.array_equal(np.asarray(r1.evals), np.asarray(r2.evals))
+    assert np.array_equal(np.asarray(r1.visited), np.asarray(r2.visited))
+    assert int(r1.steps) == int(r2.steps)
+
+
+def test_beam_search_rejects_unknown_backend(rng):
+    from repro.core.graph import empty_graph
+    from repro.core.search import beam_search
+
+    items = jnp.asarray(rng.normal(size=(10, 4)).astype(np.float32))
+    g = empty_graph(items, 2)
+    q = jnp.asarray(rng.normal(size=(1, 4)).astype(np.float32))
+    init = jnp.zeros((1, 1), jnp.int32)
+    with pytest.raises(ValueError, match="backend"):
+        beam_search(g, q, init, pool_size=2, max_steps=2, k=1, backend="cuda")
+
+
+def test_pallas_backend_rejects_custom_score_fn(rng):
+    from repro.core.graph import empty_graph
+    from repro.core.search import beam_search
+
+    items = jnp.asarray(rng.normal(size=(10, 4)).astype(np.float32))
+    g = empty_graph(items, 2)
+    q = jnp.asarray(rng.normal(size=(1, 4)).astype(np.float32))
+    init = jnp.zeros((1, 1), jnp.int32)
+    with pytest.raises(ValueError, match="score_fn"):
+        beam_search(g, q, init, pool_size=2, max_steps=2, k=1,
+                    backend="pallas", score_fn=lambda q, x, i: q[:, :1] * 0)
+
+
+def test_ipnsw_pallas_backend_end_to_end(rng):
+    """The backend= knob threads through the index classes."""
+    from repro.core import IpNSW
+
+    items = jnp.asarray(rng.normal(size=(256, 24)).astype(np.float32))
+    ref = IpNSW(max_degree=8, ef_construction=16, insert_batch=64).build(items)
+    q = jnp.asarray(rng.normal(size=(4, 24)).astype(np.float32))
+    r1 = ref.search(q, k=5, ef=16)
+    r2 = ref.search(q, k=5, ef=16, backend="pallas")
+    assert np.array_equal(np.asarray(r1.ids), np.asarray(r2.ids))

@@ -2,7 +2,10 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis; CI installs the real one
+    from _propcheck import given, settings, st
 
 from repro.core.search import _dedup_ids
 from repro.core.norms import (

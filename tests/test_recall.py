@@ -1,0 +1,98 @@
+"""Property-based recall tests: the graph walks must beat a seeded recall@10
+floor vs brute-force ground truth on the paper's two norm-bias regimes —
+tight Gaussian norms (Yahoo!Music/Tiny5M shape) and heavy power-law-tail
+lognormal norms (WordVector/ImageNet shape, Figure 2).
+
+Indexes are built once per profile (module cache); the property quantifies
+over query seeds, so every example is a fresh query batch against the same
+frozen index — the invariant the paper's Fig 7/8 curves rely on.
+"""
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis; CI installs the real one
+    from _propcheck import given, settings, st
+
+from repro.core import IpNSW, IpNSWPlus, exact_topk, recall_at_k
+from repro.data import mips_dataset, mips_queries
+
+N, D, K, EF = 1500, 24, 10, 48
+PROFILES = ("gaussian", "lognormal")  # tight norms / power-law norm tail
+# Floors hold with margin: observed min recall across seeds is ~0.92
+# (gaussian) / ~0.97 (lognormal) for both indexes at these build/search
+# parameters (see DESIGN.md §5 for how to re-measure).
+FLOORS = {"gaussian": 0.80, "lognormal": 0.85}
+SETTINGS = dict(max_examples=5, deadline=None)
+
+
+@functools.lru_cache(maxsize=None)
+def _items(profile):
+    return jnp.asarray(mips_dataset(N, D, profile=profile, seed=7))
+
+
+@functools.lru_cache(maxsize=None)
+def _ipnsw(profile):
+    return IpNSW(max_degree=12, ef_construction=32, insert_batch=256).build(
+        _items(profile)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _ipnsw_plus(profile):
+    return IpNSWPlus(max_degree=12, ef_construction=32, insert_batch=256).build(
+        _items(profile)
+    )
+
+
+def _queries(seed):
+    return jnp.asarray(mips_queries(32, D, seed=seed))
+
+
+def _gt(profile, seed):
+    _, ids = exact_topk(_queries(seed), _items(profile), k=K)
+    return np.asarray(ids)
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_beam_search_recall_floor_gaussian(seed):
+    q = _queries(seed)
+    r = _ipnsw("gaussian").search(q, k=K, ef=EF)
+    assert recall_at_k(np.asarray(r.ids), _gt("gaussian", seed)) >= FLOORS["gaussian"]
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_beam_search_recall_floor_lognormal(seed):
+    q = _queries(seed)
+    r = _ipnsw("lognormal").search(q, k=K, ef=EF)
+    assert recall_at_k(np.asarray(r.ids), _gt("lognormal", seed)) >= FLOORS["lognormal"]
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_ipnsw_plus_recall_floor_gaussian(seed):
+    q = _queries(seed)
+    r = _ipnsw_plus("gaussian").search(q, k=K, ef=EF)
+    assert recall_at_k(np.asarray(r.ids), _gt("gaussian", seed)) >= FLOORS["gaussian"]
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_ipnsw_plus_recall_floor_lognormal(seed):
+    q = _queries(seed)
+    r = _ipnsw_plus("lognormal").search(q, k=K, ef=EF)
+    assert recall_at_k(np.asarray(r.ids), _gt("lognormal", seed)) >= FLOORS["lognormal"]
+
+
+def test_pallas_backend_recall_identical():
+    """The fused backend changes speed, never results: same recall, same ids."""
+    q = _queries(123)
+    idx = _ipnsw("gaussian")
+    r_ref = idx.search(q, k=K, ef=EF)
+    r_pal = idx.search(q, k=K, ef=EF, backend="pallas")
+    assert np.array_equal(np.asarray(r_ref.ids), np.asarray(r_pal.ids))
