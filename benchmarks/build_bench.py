@@ -1,0 +1,71 @@
+"""Index-construction throughput: host loop vs single-compile lax.scan.
+
+Times a cold build (includes compile — the scan backend pays ONE compile for
+the whole schedule, the host loop one per batch shape) and a warm rebuild
+(same shapes, compile cache hit — the steady-state rebuild cost that matters
+for the fault-tolerance / shard-replacement story in distributed.py).
+
+  PYTHONPATH=src:. python benchmarks/build_bench.py
+  REPRO_BENCH_QUICK=1 ... # CI-sized
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import DIM, N_ITEMS, QUICK, dataset, emit
+from repro.core import IpNSW, IpNSWPlus
+
+PROFILES = ("music_like", "word_like")  # gaussian / lognormal norm shapes
+INDEXES = {"ipnsw": IpNSW, "ipnsw_plus": IpNSWPlus}
+BUILD_BACKENDS = ("host", "scan")
+INSERT_BATCH = 256 if QUICK else 512
+
+
+def _build(cls, items, build_backend: str, clear: bool = False) -> float:
+    if clear:  # a genuinely cold build: profiles share shapes, so without
+        jax.clear_caches()  # this only the first combination pays compiles
+    idx = cls(
+        max_degree=16,
+        ef_construction=32,
+        insert_batch=INSERT_BATCH,
+        build_backend=build_backend,
+    )
+    t0 = time.perf_counter()
+    idx.build(items)
+    g = idx.graph if isinstance(idx, IpNSW) else idx.ip_graph
+    jax.block_until_ready(g.adj)
+    return time.perf_counter() - t0
+
+
+def run() -> None:
+    rows = []
+    for profile in PROFILES:
+        items, _, _ = dataset(profile)
+        items = jnp.asarray(items)
+        n = items.shape[0]
+        for iname, cls in INDEXES.items():
+            for bb in BUILD_BACKENDS:
+                cold = _build(cls, items, bb, clear=True)
+                warm = _build(cls, items, bb)
+                rows.append(
+                    dict(
+                        bench="build",
+                        profile=profile,
+                        index=iname,
+                        build_backend=bb,
+                        n=n,
+                        dim=DIM,
+                        insert_batch=INSERT_BATCH,
+                        cold_s=round(cold, 3),
+                        warm_s=round(warm, 3),
+                        items_per_s=int(n / warm),
+                    )
+                )
+    emit(rows, header=True)
+
+
+if __name__ == "__main__":
+    run()

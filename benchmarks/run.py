@@ -9,6 +9,7 @@ import traceback
 
 from benchmarks import (
     beyond_paper,
+    build_bench,
     fig1_norm_bias,
     fig2_norm_dist,
     fig3_theorem1,
@@ -34,6 +35,7 @@ MODULES = [
     ("fig8c_robustness", fig8c_robustness),
     ("thm2_candidates", thm2_candidates),
     ("kernel_bench", kernel_bench),
+    ("build_bench", build_bench),
     ("beyond_paper", beyond_paper),
 ]
 

@@ -23,9 +23,10 @@ def main():
     _, gt = exact_topk(queries, items, k=k)
     gt = np.asarray(gt)
 
-    print(f"building {shards} shard-local ip-NSW+ indexes ({n//shards} items each)...")
-    index = build_sharded(items, shards, plus=True, max_degree=16,
-                          ef_construction=32, insert_batch=512)
+    print(f"building {shards} shard-local ip-NSW+ indexes ({n//shards} items "
+          f"each; scan backend = all shards in one device program)...")
+    index = build_sharded(items, shards, plus=True, build_backend="scan",
+                          max_degree=16, ef_construction=32, insert_batch=512)
 
     from repro.launch.mesh import make_mesh_compat
 

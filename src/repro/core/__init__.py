@@ -1,6 +1,7 @@
 """The paper's contribution: proximity-graph MIPS (ip-NSW / ip-NSW+) as a
 composable, TPU-native JAX index library."""
 from repro.core.brute_force import exact_topk
+from repro.core.build import BUILD_BACKENDS, build_graph
 from repro.core.graph import GraphIndex, empty_graph, in_degrees, out_degrees
 from repro.core.hnsw import HierarchicalIpNSW
 from repro.core.ipnsw import IpNSW
@@ -12,6 +13,7 @@ from repro.core.search import SearchResult, beam_search
 from repro.core.similarity import Similarity, normalize
 
 __all__ = [
+    "BUILD_BACKENDS",
     "GraphIndex",
     "HierarchicalIpNSW",
     "NormFilteredIndex",
@@ -22,6 +24,7 @@ __all__ = [
     "Similarity",
     "SimpleLSH",
     "beam_search",
+    "build_graph",
     "empty_graph",
     "exact_topk",
     "in_degrees",

@@ -21,6 +21,15 @@ literal directed build is non-navigable from a fixed entry vertex (see
 DESIGN.md §2).  Morozov & Babenko's released code (HNSW) adds pruned reverse
 links; ``reverse_links=True`` (default) matches the code the paper measured,
 ``False`` reproduces the printed algorithm.
+
+Build backends (``build_backend=``, see DESIGN.md §6):
+  "host"  — Python loop over insertion batches; one jit-compiled
+            find+commit per batch with a host round-trip in between.
+  "scan"  — the whole insertion schedule is a single jit-compiled
+            ``lax.scan`` whose carry is the adjacency (donated, so XLA
+            updates it in place); zero per-batch host round-trips.  The
+            tail batch is padded and masked, which keeps the resulting
+            graph bit-identical to the host loop (tests/test_build_parity).
 """
 from __future__ import annotations
 
@@ -36,6 +45,8 @@ from repro.core.search import beam_search
 from repro.core.similarity import Similarity, pair_scores, prepare_items
 
 NEG_INF = jnp.float32(-jnp.inf)
+
+BUILD_BACKENDS = ("host", "scan")
 
 
 # ---------------------------------------------------------------------------
@@ -122,14 +133,25 @@ def commit_batch(
     nbr_ids: jax.Array,      # [B, M] int32 chosen neighbors (-1 padded)
     nbr_scores: jax.Array,   # [B, M] fp32
     norms: jax.Array,        # [N] fp32 (for entry maintenance)
+    valid: Optional[jax.Array] = None,  # [B] bool, False = pad row (skipped)
     reverse_links: bool = True,
 ) -> GraphIndex:
     """Write one insertion batch into the graph (forward + reverse edges) and
-    advance size/entry."""
+    advance size/entry.  ``valid`` masks pad rows of a fixed-shape batch (the
+    scan backend's tail batch); masked rows contribute no edges and no size
+    advance, so a padded batch commits bit-identically to its ragged slice.
+    Callers that pass ``valid`` must already have masked pad rows of
+    ``nbr_ids`` to -1 (keeps them out of the reverse-edge table)."""
     n, m = graph.adj.shape
     b = batch_ids.shape[0]
 
-    adj = graph.adj.at[batch_ids].set(nbr_ids)
+    if valid is None:
+        adj = graph.adj.at[batch_ids].set(nbr_ids)
+        size = jnp.maximum(graph.size, batch_ids.max() + 1)
+    else:
+        rows = jnp.where(valid, batch_ids, n)  # out-of-range rows are dropped
+        adj = graph.adj.at[rows].set(nbr_ids, mode="drop")
+        size = jnp.maximum(graph.size, jnp.max(jnp.where(valid, batch_ids, -1)) + 1)
 
     if reverse_links:
         targets = nbr_ids.reshape(-1)
@@ -137,7 +159,6 @@ def commit_batch(
         scores = nbr_scores.reshape(-1)
         adj = _segmented_topM_merge(adj, graph.items, targets, cands, scores)
 
-    size = jnp.maximum(graph.size, batch_ids.max() + 1)
     inserted = jnp.arange(n) < size
     entry = jnp.argmax(jnp.where(inserted, norms, -jnp.inf)).astype(jnp.int32)
     return GraphIndex(adj=adj, items=graph.items, size=size, entry=entry)
@@ -195,8 +216,133 @@ def find_neighbors(
 
 
 # ---------------------------------------------------------------------------
-# Build driver
+# Build drivers
 # ---------------------------------------------------------------------------
+
+
+def batch_schedule(n: int, insert_batch: int):
+    """The insertion schedule shared by every build backend.
+
+    Returns ``(first, batch_ids, batch_valid)``: the bootstrap-batch size and
+    the ``[num_batches, insert_batch]`` id / validity arrays of the remaining
+    batches (tail padded with clamped ids, ``valid=False``).  The scan build
+    consumes this directly; the host loops iterate start/stop ranges that
+    match it by construction — tests/test_build_parity.py pins the two
+    bit-identical, so edits here must keep them in lockstep.
+    """
+    first = min(insert_batch, n)
+    starts = np.arange(first, n, insert_batch, dtype=np.int64)
+    ids = starts[:, None] + np.arange(insert_batch, dtype=np.int64)[None, :]
+    valid = ids < n
+    ids = np.minimum(ids, n - 1).astype(np.int32)
+    return first, ids, valid
+
+
+def bootstrap_graph(
+    prepared: jax.Array,
+    norms: jax.Array,
+    *,
+    max_degree: int,
+    insert_batch: int,
+    reverse_links: bool,
+) -> GraphIndex:
+    """Empty graph + the sequential-prefix first batch (shared by backends)."""
+    n = prepared.shape[0]
+    graph = empty_graph(prepared, max_degree)
+    first = min(insert_batch, n)
+    ids0 = jnp.arange(first, dtype=jnp.int32)
+    nbr0, sc0 = _bootstrap_neighbors(prepared[:first], max_degree)
+    return commit_batch(graph, ids0, nbr0, sc0, norms, reverse_links=reverse_links)
+
+
+def _scan_insert(
+    adj: jax.Array,
+    size: jax.Array,
+    entry: jax.Array,
+    prepared: jax.Array,
+    norms: jax.Array,
+    batch_ids: jax.Array,    # [T, B] int32 (tail clamped)
+    batch_valid: jax.Array,  # [T, B] bool
+    *,
+    max_degree: int,
+    ef: int,
+    max_steps: int,
+    reverse_links: bool,
+    backend: str,
+):
+    """All remaining insertion batches as one ``lax.scan``.
+
+    Carry = (adj, size, entry); items/norms are closed over (never copied).
+    Pad rows of the tail batch run real (masked-out) walks, and the done
+    flag of ``beam_search`` freezes finished queries, so every valid row's
+    neighbors — and therefore the committed graph — are bit-identical to
+    the host loop's ragged batches.
+    """
+
+    def body(carry, xs):
+        adj, size, entry = carry
+        bids, vmask = xs
+        graph = GraphIndex(adj=adj, items=prepared, size=size, entry=entry)
+        nbr, sc = find_neighbors(
+            graph,
+            jnp.take(prepared, bids, axis=0),
+            max_degree=max_degree,
+            ef=ef,
+            max_steps=max_steps,
+            backend=backend,
+        )
+        nbr = jnp.where(vmask[:, None], nbr, -1)
+        sc = jnp.where(vmask[:, None], sc, NEG_INF)
+        g = commit_batch(
+            graph, bids, nbr, sc, norms, valid=vmask, reverse_links=reverse_links
+        )
+        return (g.adj, g.size, g.entry), None
+
+    (adj, size, entry), _ = jax.lax.scan(
+        body, (adj, size, entry), (batch_ids, batch_valid)
+    )
+    return adj, size, entry
+
+
+# Single-index entry point: the adjacency carry is donated, so the only full
+# [N, M] buffer alive during the build is the one XLA updates in place.
+_scan_insert_jit = functools.partial(
+    jax.jit,
+    static_argnames=("max_degree", "ef", "max_steps", "reverse_links", "backend"),
+    donate_argnums=(0,),
+)(_scan_insert)
+
+
+def scan_build_arrays(
+    prepared: jax.Array,
+    norms: jax.Array,
+    batch_ids: jax.Array,
+    batch_valid: jax.Array,
+    *,
+    max_degree: int,
+    ef: int,
+    max_steps: int,
+    insert_batch: int,
+    reverse_links: bool,
+    backend: str,
+):
+    """Fully-traced build (bootstrap + scan) -> (adj, size, entry).
+
+    Pure function of arrays: ``build_sharded`` vmaps it over a leading shard
+    axis so all P shard graphs build inside one device program.
+    """
+    g = bootstrap_graph(
+        prepared,
+        norms,
+        max_degree=max_degree,
+        insert_batch=insert_batch,
+        reverse_links=reverse_links,
+    )
+    return _scan_insert(
+        g.adj, g.size, g.entry, prepared, norms, batch_ids, batch_valid,
+        max_degree=max_degree, ef=ef, max_steps=max_steps,
+        reverse_links=reverse_links, backend=backend,
+    )
 
 
 def build_graph(
@@ -210,6 +356,7 @@ def build_graph(
     max_steps: Optional[int] = None,
     neighbor_fn: Optional[Callable] = None,
     backend: str = "reference",
+    build_backend: str = "host",
     progress: bool = False,
 ) -> GraphIndex:
     """Build an NSW proximity graph for ``items`` under ``similarity``.
@@ -217,20 +364,47 @@ def build_graph(
     ``neighbor_fn(graph, batch_items) -> (ids, scores)`` overrides the
     neighbor search — ip-NSW+ passes its own Algorithm-3-based finder.
     ``backend`` selects the walk step backend for insertion searches
-    (see search.STEP_BACKENDS).
+    (see search.STEP_BACKENDS); ``build_backend`` selects the insertion
+    driver ("host" Python loop | "scan" single-compile lax.scan, see
+    BUILD_BACKENDS and DESIGN.md §6).
     """
+    if build_backend not in BUILD_BACKENDS:
+        raise ValueError(
+            f"build_backend must be one of {BUILD_BACKENDS}, got {build_backend!r}"
+        )
     prepared = prepare_items(jnp.asarray(items), similarity)
     n = prepared.shape[0]
     norms = jnp.linalg.norm(prepared, axis=-1)
-    graph = empty_graph(prepared, max_degree)
     steps = max_steps if max_steps is not None else 2 * ef_construction
 
-    first = min(insert_batch, n)
-    ids0 = jnp.arange(first, dtype=jnp.int32)
-    nbr0, sc0 = _bootstrap_neighbors(prepared[:first], max_degree)
-    graph = commit_batch(graph, ids0, nbr0, sc0, norms, reverse_links=reverse_links)
+    if build_backend == "scan":
+        if neighbor_fn is not None:
+            raise ValueError(
+                "build_backend='scan' traces the standard Algorithm-2 finder "
+                "into the scan body and cannot honor neighbor_fn; use "
+                "build_backend='host' for custom finders"
+            )
+        graph = bootstrap_graph(
+            prepared, norms, max_degree=max_degree, insert_batch=insert_batch,
+            reverse_links=reverse_links,
+        )
+        _, bids, valid = batch_schedule(n, insert_batch)
+        if bids.shape[0]:
+            adj, size, entry = _scan_insert_jit(
+                graph.adj, graph.size, graph.entry, prepared, norms,
+                jnp.asarray(bids), jnp.asarray(valid),
+                max_degree=max_degree, ef=ef_construction, max_steps=steps,
+                reverse_links=reverse_links, backend=backend,
+            )
+            graph = GraphIndex(adj=adj, items=prepared, size=size, entry=entry)
+        return graph
 
-    start = first
+    graph = bootstrap_graph(
+        prepared, norms, max_degree=max_degree, insert_batch=insert_batch,
+        reverse_links=reverse_links,
+    )
+
+    start = min(insert_batch, n)
     while start < n:
         stop = min(start + insert_batch, n)
         bids = jnp.arange(start, stop, dtype=jnp.int32)

@@ -39,16 +39,23 @@ class ShardedIndex(NamedTuple):
     ip: GraphIndex with adj [P, Nloc, M], items [P, Nloc, d], size/entry [P]
     ang: same for the angular graph, or None for plain ip-NSW
     offset: [P] global-id offset of every shard
+    count: [P] number of REAL items per shard, or None (legacy indexes).
+           The tail shard is zero-padded to Nloc at build time; pad nodes are
+           real graph vertices locally, so the merge must drop local ids
+           >= count — otherwise their 0.0 scores outrank genuine
+           negative-score items and surface global ids >= N.
     """
 
     ip: GraphIndex
     ang: Optional[GraphIndex]
     offset: jax.Array
+    count: Optional[jax.Array] = None
 
 
 def stack_shards(
     ip_graphs: Sequence[GraphIndex],
     ang_graphs: Optional[Sequence[GraphIndex]] = None,
+    counts: Optional[Sequence[int]] = None,
 ) -> ShardedIndex:
     stack = lambda *xs: jnp.stack(xs)
     ip = jax.tree.map(stack, *ip_graphs)
@@ -57,7 +64,8 @@ def stack_shards(
     offsets = jnp.asarray(
         [sum(sizes[:i]) for i in range(len(sizes))], jnp.int32
     )
-    return ShardedIndex(ip=ip, ang=ang, offset=offsets)
+    count = jnp.asarray(list(counts), jnp.int32) if counts is not None else None
+    return ShardedIndex(ip=ip, ang=ang, offset=offsets, count=count)
 
 
 def build_sharded(
@@ -65,16 +73,25 @@ def build_sharded(
     n_shards: int,
     *,
     plus: bool = True,
+    build_backend: str = "host",
     **index_kwargs,
 ) -> ShardedIndex:
     """Split ``items`` into ``n_shards`` contiguous row shards and build one
-    local index per shard (host loop; each build is jit-compiled inside)."""
+    local index per shard.
+
+    ``build_backend="host"`` builds shards sequentially (each a host-loop or
+    scan build per ``index_kwargs``); ``"scan"`` vmaps the fully-traced scan
+    build over the shard axis, so all P shard graphs build inside ONE device
+    program.  ``index_kwargs`` are IpNSW / IpNSWPlus constructor fields
+    (including ``backend=`` for the insertion walks)."""
     from repro.core.ipnsw import IpNSW
     from repro.core.ipnsw_plus import IpNSWPlus
 
     n = items.shape[0]
     per = -(-n // n_shards)
-    ip_graphs, ang_graphs = [], []
+    counts = [max(min(per, n - s * per), 0) for s in range(n_shards)]
+
+    locals_ = []
     for s in range(n_shards):
         local = items[s * per : min((s + 1) * per, n)]
         if local.shape[0] < per:  # pad the ragged tail shard with zeros
@@ -82,6 +99,13 @@ def build_sharded(
             local = jnp.concatenate(
                 [local, jnp.zeros((pad, items.shape[-1]), items.dtype)]
             )
+        locals_.append(local)
+
+    if build_backend == "scan":
+        return _build_sharded_scan(locals_, counts, plus=plus, **index_kwargs)
+
+    ip_graphs, ang_graphs = [], []
+    for local in locals_:
         if plus:
             idx = IpNSWPlus(**index_kwargs).build(local)
             ip_graphs.append(idx.ip_graph)
@@ -89,7 +113,68 @@ def build_sharded(
         else:
             idx = IpNSW(**index_kwargs).build(local)
             ip_graphs.append(idx.graph)
-    return stack_shards(ip_graphs, ang_graphs if plus else None)
+    return stack_shards(ip_graphs, ang_graphs if plus else None, counts)
+
+
+def _build_sharded_scan(
+    locals_: Sequence[jax.Array],
+    counts: Sequence[int],
+    *,
+    plus: bool,
+    **index_kwargs,
+) -> ShardedIndex:
+    """Shard-parallel scan build: one jit, vmap over the shard axis."""
+    from repro.core.build import batch_schedule, scan_build_arrays
+    from repro.core.ipnsw import IpNSW
+    from repro.core.ipnsw_plus import IpNSWPlus, scan_build_plus_arrays
+    from repro.core.similarity import normalize
+
+    proto = (IpNSWPlus if plus else IpNSW)(**index_kwargs)
+
+    p = len(locals_)
+    per = int(locals_[0].shape[0])
+    stacked = jnp.stack(locals_)                      # [P, Nloc, d]
+    norms = jnp.linalg.norm(stacked, axis=-1)         # [P, Nloc]
+    _, bids, valid = batch_schedule(per, proto.insert_batch)
+    bids, valid = jnp.asarray(bids), jnp.asarray(valid)
+    offsets = jnp.asarray([s * per for s in range(p)], jnp.int32)
+    count = jnp.asarray(list(counts), jnp.int32)
+
+    if plus:
+        ang_items = normalize(stacked)
+        ang_norms = jnp.ones((p, per), jnp.float32)
+        fn = functools.partial(
+            scan_build_plus_arrays,
+            max_degree=proto.max_degree,
+            ef_construction=proto.ef_construction,
+            ang_degree=proto.ang_degree,
+            ang_ef=proto.ang_ef,
+            k_angular=proto.k_angular,
+            insert_batch=proto.insert_batch,
+            reverse_links=proto.reverse_links,
+            backend=proto.backend,
+        )
+        a_adj, a_size, a_entry, i_adj, i_size, i_entry = jax.jit(
+            jax.vmap(lambda it, ai, no, an: fn(it, ai, no, an, bids, valid))
+        )(stacked, ang_items, norms, ang_norms)
+        ip = GraphIndex(adj=i_adj, items=stacked, size=i_size, entry=i_entry)
+        ang = GraphIndex(adj=a_adj, items=ang_items, size=a_size, entry=a_entry)
+        return ShardedIndex(ip=ip, ang=ang, offset=offsets, count=count)
+
+    fn = functools.partial(
+        scan_build_arrays,
+        max_degree=proto.max_degree,
+        ef=proto.ef_construction,
+        max_steps=2 * proto.ef_construction,
+        insert_batch=proto.insert_batch,
+        reverse_links=proto.reverse_links,
+        backend=proto.backend,
+    )
+    adj, size, entry = jax.jit(
+        jax.vmap(lambda it, no: fn(it, no, bids, valid))
+    )(stacked, norms)
+    ip = GraphIndex(adj=adj, items=stacked, size=size, entry=entry)
+    return ShardedIndex(ip=ip, ang=None, offset=offsets, count=count)
 
 
 # ---------------------------------------------------------------------------
@@ -98,12 +183,21 @@ def build_sharded(
 
 
 def _local_ipnsw(
-    graphs: ShardedIndex, queries: jax.Array, *, k: int, ef: int, max_steps: int
+    graphs: ShardedIndex,
+    queries: jax.Array,
+    *,
+    k: int,
+    ef: int,
+    max_steps: int,
+    backend: str = "reference",
 ):
     g = graphs.ip
     b = queries.shape[0]
     init = jnp.broadcast_to(g.entry[None, None], (b, 1)).astype(jnp.int32)
-    res = beam_search(g, queries, init, pool_size=max(ef, k), max_steps=max_steps, k=k)
+    res = beam_search(
+        g, queries, init, pool_size=max(ef, k), max_steps=max_steps, k=k,
+        backend=backend,
+    )
     return res.ids, res.scores, res.evals
 
 
@@ -116,6 +210,7 @@ def _local_ipnsw_plus(
     max_steps: int,
     ang_ef: int = 10,
     k_angular: int = 10,
+    backend: str = "reference",
 ):
     from repro.core.ipnsw_plus import _seed_from_angular
 
@@ -129,12 +224,27 @@ def _local_ipnsw_plus(
         pool_size=max(ang_ef, k_angular),
         max_steps=2 * max(ang_ef, k_angular),
         k=k_angular,
+        backend=backend,
     )
     seeds = _seed_from_angular(graphs.ip.adj, a.ids)
     r = beam_search(
-        graphs.ip, queries, seeds, pool_size=max(ef, k), max_steps=max_steps, k=k
+        graphs.ip, queries, seeds, pool_size=max(ef, k), max_steps=max_steps, k=k,
+        backend=backend,
     )
     return r.ids, r.scores, a.evals + r.evals
+
+
+def _globalize(blk: ShardedIndex, ids: jax.Array, scores: jax.Array):
+    """Map local result ids to global ids, dropping pad nodes.
+
+    Pad rows of the tail shard are genuine local graph vertices with
+    zero vectors (score 0.0); without the ``count`` mask they would
+    outrank real negative-score items and surface ids >= N."""
+    keep = ids >= 0
+    if blk.count is not None:
+        keep &= ids < blk.count
+    gids = jnp.where(keep, ids + blk.offset, -1)
+    return gids, jnp.where(keep, scores, NEG_INF)
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +264,14 @@ def _merge_topk(all_ids, all_scores, k: int, shard_mask=None):
     return jnp.where(vals > NEG_INF, out_ids, -1), vals
 
 
+def _make_local_fn(plus: bool, ang_ef: int, k_angular: int) -> Callable:
+    if plus:
+        return functools.partial(
+            _local_ipnsw_plus, ang_ef=ang_ef, k_angular=k_angular
+        )
+    return _local_ipnsw
+
+
 def sharded_search(
     index: ShardedIndex,
     queries: jax.Array,
@@ -165,22 +283,31 @@ def sharded_search(
     max_steps: Optional[int] = None,
     plus: bool = True,
     shard_mask: Optional[jax.Array] = None,
+    backend: str = "reference",
+    ang_ef: int = 10,
+    k_angular: int = 10,
 ):
     """shard_map driver: local walk on every shard + all-gather top-k merge.
 
     Queries are replicated over ``axis`` (shard the batch over the remaining
-    mesh axes with in_shardings at the jit level).
+    mesh axes with in_shardings at the jit level).  ``backend`` selects the
+    walk step kernel for the local searches ("reference" | "pallas", see
+    search.STEP_BACKENDS); ``ang_ef``/``k_angular`` parameterize the angular
+    stage of the ip-NSW+ local walks (pass the values the index was built
+    with — they are search-time knobs, not baked into the index).
     """
     steps = max_steps if max_steps is not None else 2 * ef
-    local_fn = _local_ipnsw_plus if plus else _local_ipnsw
+    local_fn = _make_local_fn(plus, ang_ef, k_angular)
     mask = shard_mask if shard_mask is not None else jnp.ones(
         (index.offset.shape[0],), bool
     )
 
     def body(idx_blk: ShardedIndex, mask_blk, q):
         blk = jax.tree.map(lambda x: x[0], idx_blk)  # strip unit shard dim
-        ids, scores, evals = local_fn(blk, q, k=k, ef=ef, max_steps=steps)
-        gids = jnp.where(ids >= 0, ids + blk.offset, -1)
+        ids, scores, evals = local_fn(
+            blk, q, k=k, ef=ef, max_steps=steps, backend=backend
+        )
+        gids, scores = _globalize(blk, ids, scores)
         all_ids = jax.lax.all_gather(gids, axis)        # [P, B, k]
         all_scores = jax.lax.all_gather(scores, axis)
         all_mask = jax.lax.all_gather(mask_blk[0], axis)
@@ -207,16 +334,22 @@ def sharded_search_reference(
     max_steps: Optional[int] = None,
     plus: bool = True,
     shard_mask: Optional[jax.Array] = None,
+    backend: str = "reference",
+    ang_ef: int = 10,
+    k_angular: int = 10,
 ):
     """Single-device oracle: identical math to ``sharded_search`` with the
     shard dimension mapped by vmap instead of shard_map.  Used by tests to
     pin down the distributed semantics on CPU."""
     steps = max_steps if max_steps is not None else 2 * ef
-    local_fn = _local_ipnsw_plus if plus else _local_ipnsw
+    local_fn = _make_local_fn(plus, ang_ef, k_angular)
 
     def one(blk: ShardedIndex):
-        ids, scores, evals = local_fn(blk, queries, k=k, ef=ef, max_steps=steps)
-        return jnp.where(ids >= 0, ids + blk.offset, -1), scores, evals
+        ids, scores, evals = local_fn(
+            blk, queries, k=k, ef=ef, max_steps=steps, backend=backend
+        )
+        gids, scores = _globalize(blk, ids, scores)
+        return gids, scores, evals
 
     all_ids, all_scores, all_evals = jax.vmap(one)(index)
     out_ids, out_scores = _merge_topk(all_ids, all_scores, k, shard_mask)

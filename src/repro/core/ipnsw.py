@@ -44,7 +44,9 @@ class IpNSW:
 
     build parameters mirror the paper: ``max_degree`` = M, ``ef_construction``
     = candidate-pool size l used during insertion.  ``backend`` selects the
-    walk step implementation ("reference" | "pallas", see search.py).
+    walk step implementation ("reference" | "pallas", see search.py);
+    ``build_backend`` selects the insertion driver ("host" | "scan", see
+    build.BUILD_BACKENDS).
     """
 
     max_degree: int = 16
@@ -52,6 +54,7 @@ class IpNSW:
     insert_batch: int = 128
     reverse_links: bool = True
     backend: str = "reference"
+    build_backend: str = "host"
     graph: Optional[GraphIndex] = None
 
     def build(self, items: jax.Array, progress: bool = False) -> "IpNSW":
@@ -63,6 +66,7 @@ class IpNSW:
             insert_batch=self.insert_batch,
             reverse_links=self.reverse_links,
             backend=self.backend,
+            build_backend=self.build_backend,
             progress=progress,
         )
         return self

@@ -31,7 +31,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.build import (
+    BUILD_BACKENDS,
     _bootstrap_neighbors,
+    batch_schedule,
     commit_batch,
     find_neighbors,
 )
@@ -132,17 +134,42 @@ class IpNSWPlus:
     insert_batch: int = 128
     reverse_links: bool = True
     backend: str = "reference"    # walk step backend (search.STEP_BACKENDS)
+    build_backend: str = "host"   # insertion driver (build.BUILD_BACKENDS)
     ang_graph: Optional[GraphIndex] = field(default=None)
     ip_graph: Optional[GraphIndex] = field(default=None)
 
     # ------------------------------------------------------------------ build
 
     def build(self, items: jax.Array, progress: bool = False) -> "IpNSWPlus":
+        if self.build_backend not in BUILD_BACKENDS:
+            raise ValueError(
+                f"build_backend must be one of {BUILD_BACKENDS}, "
+                f"got {self.build_backend!r}"
+            )
         items = jnp.asarray(items)
         n = items.shape[0]
         ang_items = normalize(items)
         norms = jnp.linalg.norm(items, axis=-1)
         ang_norms = jnp.ones((n,), jnp.float32)
+
+        if self.build_backend == "scan":
+            _, bids, valid = batch_schedule(n, self.insert_batch)
+            arrays = _scan_build_plus_jit(
+                items, ang_items, norms, ang_norms,
+                jnp.asarray(bids), jnp.asarray(valid),
+                max_degree=self.max_degree,
+                ef_construction=self.ef_construction,
+                ang_degree=self.ang_degree,
+                ang_ef=self.ang_ef,
+                k_angular=self.k_angular,
+                insert_batch=self.insert_batch,
+                reverse_links=self.reverse_links,
+                backend=self.backend,
+            )
+            (a_adj, a_size, a_entry, i_adj, i_size, i_entry) = arrays
+            self.ang_graph = GraphIndex(a_adj, ang_items, a_size, a_entry)
+            self.ip_graph = GraphIndex(i_adj, items, i_size, i_entry)
+            return self
 
         ang = empty_graph(ang_items, self.ang_degree)
         ip = empty_graph(items, self.max_degree)
@@ -263,3 +290,104 @@ def _find_ip_neighbors_seeded(
     )
     ids = jnp.where(res.scores > NEG_INF, res.ids, -1)
     return ids, res.scores
+
+
+# ---------------------------------------------------------------------------
+# Scan build backend (§4.2 construction as one lax.scan over both graphs)
+# ---------------------------------------------------------------------------
+
+
+def scan_build_plus_arrays(
+    items: jax.Array,
+    ang_items: jax.Array,
+    norms: jax.Array,
+    ang_norms: jax.Array,
+    batch_ids: jax.Array,    # [T, B] int32 (tail clamped)
+    batch_valid: jax.Array,  # [T, B] bool
+    *,
+    max_degree: int,
+    ef_construction: int,
+    ang_degree: int,
+    ang_ef: int,
+    k_angular: int,
+    insert_batch: int,
+    reverse_links: bool,
+    backend: str,
+):
+    """Fully-traced ip-NSW+ build: bootstrap both graphs, then one
+    ``lax.scan`` whose carry holds *both* adjacencies, so the §4.2
+    interleaving (angular insert -> angular-seeded ip insert) survives
+    intact with zero host round-trips.  Returns
+    ``(ang_adj, ang_size, ang_entry, ip_adj, ip_size, ip_entry)``.
+    ``build_sharded`` vmaps this over a leading shard axis."""
+    n = items.shape[0]
+    ang = empty_graph(ang_items, ang_degree)
+    ip = empty_graph(items, max_degree)
+
+    first = min(insert_batch, n)
+    ids0 = jnp.arange(first, dtype=jnp.int32)
+    a_nbr0, a_sc0 = _bootstrap_neighbors(ang_items[:first], ang_degree)
+    ang = commit_batch(ang, ids0, a_nbr0, a_sc0, ang_norms, reverse_links=reverse_links)
+    g_nbr0, g_sc0 = _bootstrap_neighbors(items[:first], max_degree)
+    ip = commit_batch(ip, ids0, g_nbr0, g_sc0, norms, reverse_links=reverse_links)
+
+    ang_steps = 2 * max(ang_ef, ang_degree)
+    ip_steps = 2 * ef_construction
+
+    def body(carry, xs):
+        a_adj, a_size, a_entry, i_adj, i_size, i_entry = carry
+        bids, vmask = xs
+        ang_g = GraphIndex(a_adj, ang_items, a_size, a_entry)
+        ip_g = GraphIndex(i_adj, items, i_size, i_entry)
+
+        # 1. insert into the angular graph (plain Algorithm 2)
+        a_nbr, a_sc = find_neighbors(
+            ang_g,
+            jnp.take(ang_items, bids, axis=0),
+            max_degree=ang_degree,
+            ef=max(ang_ef, ang_degree),
+            max_steps=ang_steps,
+            backend=backend,
+        )
+        ang2 = commit_batch(
+            ang_g, bids,
+            jnp.where(vmask[:, None], a_nbr, -1),
+            jnp.where(vmask[:, None], a_sc, NEG_INF),
+            ang_norms, valid=vmask, reverse_links=reverse_links,
+        )
+
+        # 2. insert into the ip graph with the ip-NSW+ search itself,
+        #    seeded from the just-found (unmasked — valid rows only matter)
+        #    angular neighbors, against the pre-commit ip graph.
+        g_nbr, g_sc = _find_ip_neighbors_seeded(
+            ip_g,
+            jnp.take(items, bids, axis=0),
+            a_nbr[:, :k_angular],
+            max_degree=max_degree,
+            ef=ef_construction,
+            max_steps=ip_steps,
+            backend=backend,
+        )
+        ip2 = commit_batch(
+            ip_g, bids,
+            jnp.where(vmask[:, None], g_nbr, -1),
+            jnp.where(vmask[:, None], g_sc, NEG_INF),
+            norms, valid=vmask, reverse_links=reverse_links,
+        )
+        return (ang2.adj, ang2.size, ang2.entry, ip2.adj, ip2.size, ip2.entry), None
+
+    carry = (ang.adj, ang.size, ang.entry, ip.adj, ip.size, ip.entry)
+    if batch_ids.shape[0]:
+        carry, _ = jax.lax.scan(body, carry, (batch_ids, batch_valid))
+    return carry
+
+
+# Single-index entry point.  Both adjacencies live only as scan carries
+# inside the trace, so XLA aliases them in place across iterations.
+_scan_build_plus_jit = functools.partial(
+    jax.jit,
+    static_argnames=(
+        "max_degree", "ef_construction", "ang_degree", "ang_ef", "k_angular",
+        "insert_batch", "reverse_links", "backend",
+    ),
+)(scan_build_plus_arrays)

@@ -2,7 +2,8 @@
 stage (--index ipnsw_plus), the ip-NSW baseline, or the exact scan.
 
   PYTHONPATH=src python -m repro.launch.serve --index ipnsw_plus \
-      --n-items 20000 --batch 256 --ef 40 [--shards 4]
+      --n-items 20000 --batch 256 --ef 40 [--shards 4] \
+      [--backend pallas] [--build-backend scan]
 
 With --shards > 1, items are row-sharded into shard-local sub-indexes and
 queries fan out via shard_map (requires that many local devices; use
@@ -11,6 +12,7 @@ XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU).
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import numpy as np
@@ -32,6 +34,12 @@ def main():
     ap.add_argument("--ef", type=int, default=40)
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--profile", default="lognormal")
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"],
+                    help="walk step backend (search.STEP_BACKENDS)")
+    ap.add_argument("--build-backend", default="host",
+                    choices=["host", "scan"],
+                    help="insertion driver (build.BUILD_BACKENDS)")
     args = ap.parse_args()
 
     items = jnp.asarray(mips_dataset(args.n_items, args.dim, args.profile, seed=0))
@@ -48,15 +56,22 @@ def main():
         )
         index = build_sharded(items, args.shards,
                               plus=args.index == "ipnsw_plus",
+                              build_backend=args.build_backend,
+                              backend=args.backend,
                               max_degree=16, ef_construction=32,
                               insert_batch=512)
         from repro.launch.mesh import make_mesh_compat
 
         mesh = make_mesh_compat((args.shards,), ("model",))
+        # jit the whole fan-out: sharded_search alone rebuilds its shard_map
+        # closure per call, so without this the "warmup" would not cache
+        # anything and the timed call would still pay trace+compile.
+        search = jax.jit(functools.partial(
+            sharded_search, mesh=mesh, k=args.k, ef=args.ef,
+            backend=args.backend, plus=args.index == "ipnsw_plus"))
+        jax.block_until_ready(search(index, queries)[0])  # compile warmup
         t0 = time.perf_counter()
-        ids, _, evals = sharded_search(index, queries, mesh=mesh, k=args.k,
-                                       ef=args.ef,
-                                       plus=args.index == "ipnsw_plus")
+        ids, _, evals = search(index, queries)
         jax.block_until_ready(ids)
         dt = time.perf_counter() - t0
         rec = recall_at_k(np.asarray(ids), gt)
@@ -69,7 +84,9 @@ def main():
         rec, ev = recall_at_k(np.asarray(ids), gt), float(args.n_items)
     else:
         cls = IpNSWPlus if args.index == "ipnsw_plus" else IpNSW
-        index = cls(max_degree=16, ef_construction=32, insert_batch=512).build(items)
+        index = cls(max_degree=16, ef_construction=32, insert_batch=512,
+                    backend=args.backend,
+                    build_backend=args.build_backend).build(items)
         r = index.search(queries, k=args.k, ef=args.ef)  # compile warmup
         jax.block_until_ready(r.ids)
         t0 = time.perf_counter()

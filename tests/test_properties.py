@@ -1,11 +1,21 @@
-"""Property-based tests (hypothesis) for system invariants."""
+"""Property-based tests (hypothesis) for system invariants.
+
+REPRO_TEST_QUICK=1 shrinks example counts and Monte-Carlo sizes (consistent
+with REPRO_BENCH_QUICK for benchmarks); the heaviest cases carry
+``@pytest.mark.slow`` so ``-m "not slow"`` gives a fast local loop.
+"""
+import os
+
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # container has no hypothesis; CI installs the real one
     from _propcheck import given, settings, st
+
+QUICK = os.environ.get("REPRO_TEST_QUICK", "0") == "1"
 
 from repro.core.search import _dedup_ids
 from repro.core.norms import (
@@ -18,7 +28,7 @@ from repro.core.metrics import recall_at_k
 from repro.kernels.topk_merge import topk_merge, topk_merge_ref
 from repro.models.recsys.embedding import embedding_bag, embedding_bag_ragged
 
-SETTINGS = dict(max_examples=25, deadline=None)
+SETTINGS = dict(max_examples=5 if QUICK else 25, deadline=None)
 
 
 @given(
@@ -55,6 +65,7 @@ def test_theorem1_alpha1_is_half():
     assert abs(theorem1_probability(1.0) - 0.5) < 1e-4
 
 
+@pytest.mark.slow
 @given(
     st.floats(0.1, 0.999),
     st.floats(0.1, 10.0),
@@ -65,7 +76,8 @@ def test_theorem1_alpha1_is_half():
 def test_theorem2_conditional_matches_monte_carlo(beta, gamma, xn, yn):
     """x.z | y.z = gamma is N(gamma*beta*|x|/|y|, |x|^2(1-beta^2)) — checked
     against explicit construction of x with angle beta to y."""
-    d = 4096
+    d = 1024 if QUICK else 4096
+    n_mc = 5000 if QUICK else 20000
     rng = np.random.default_rng(0)
     y = np.zeros(d)
     y[0] = yn
@@ -74,10 +86,10 @@ def test_theorem2_conditional_matches_monte_carlo(beta, gamma, xn, yn):
     x[1] = np.sqrt(max(1 - beta**2, 0.0)) * xn
     mean, std = theorem2_conditional(beta, gamma, xn, yn)
     # z conditioned on y.z = gamma: z0 = gamma/yn, others free N(0,1)
-    z = rng.normal(size=(20000, d))
+    z = rng.normal(size=(n_mc, d))
     z[:, 0] = gamma / yn
     xz = z @ x
-    assert abs(xz.mean() - mean) < 5 * std / np.sqrt(20000) + 1e-3
+    assert abs(xz.mean() - mean) < 5 * std / np.sqrt(n_mc) + 1e-3
     assert abs(xz.std() - std) < 0.05 * std + 1e-3
 
 
@@ -97,6 +109,7 @@ def test_norm_groups_partition(n, n_groups):
         assert top.min() >= rest.max() - 1e-12
 
 
+@pytest.mark.slow
 @given(st.integers(1, 40), st.integers(1, 16), st.integers(1, 16))
 @settings(**SETTINGS)
 def test_topk_merge_property(b, l, m):
@@ -117,6 +130,7 @@ def test_topk_merge_property(b, l, m):
     assert np.all(np.diff(s, axis=1) <= 1e-6)
 
 
+@pytest.mark.slow
 @given(st.integers(1, 8), st.integers(1, 10), st.integers(2, 50))
 @settings(**SETTINGS)
 def test_embedding_bag_padded_equals_ragged(b, lmax, v):
