@@ -1,36 +1,40 @@
-"""Index-construction throughput: host loop vs single-compile lax.scan.
+"""Index-construction throughput: host loop vs single-compile lax.scan, plus
+a find-vs-commit phase split across commit backends.
 
 Times a cold build (includes compile — the scan backend pays ONE compile for
 the whole schedule, the host loop one per batch shape) and a warm rebuild
 (same shapes, compile cache hit — the steady-state rebuild cost that matters
 for the fault-tolerance / shard-replacement story in distributed.py).
 
+The ``build_phase`` rows replicate the host driver with find_neighbors and
+commit_batch timed separately, once per commit backend (DESIGN.md §7) — the
+commit share of the wall clock is what the fused commit-merge kernel attacks.
+Off-TPU the pallas commit runs in interpret mode, so its wall time is a
+correctness-path cost record (like kernel_bench's pallas rows), not a TPU
+projection; the row pair pins the reference-vs-fused trajectory per release.
+
   PYTHONPATH=src:. python benchmarks/build_bench.py
-  REPRO_BENCH_QUICK=1 ... # CI-sized
+  PYTHONPATH=src:. python benchmarks/build_bench.py --quick   # CI-sized
+  REPRO_BENCH_QUICK=1 ...                                     # same as --quick
 """
 from __future__ import annotations
 
+import argparse
+import os
 import time
 
-import jax
-import jax.numpy as jnp
 
-from benchmarks.common import DIM, N_ITEMS, QUICK, dataset, emit
-from repro.core import IpNSW, IpNSWPlus
+def _build(cls, items, build_backend: str, insert_batch: int,
+           clear: bool = False) -> float:
+    import jax
+    from repro.core import IpNSW
 
-PROFILES = ("music_like", "word_like")  # gaussian / lognormal norm shapes
-INDEXES = {"ipnsw": IpNSW, "ipnsw_plus": IpNSWPlus}
-BUILD_BACKENDS = ("host", "scan")
-INSERT_BATCH = 256 if QUICK else 512
-
-
-def _build(cls, items, build_backend: str, clear: bool = False) -> float:
     if clear:  # a genuinely cold build: profiles share shapes, so without
         jax.clear_caches()  # this only the first combination pays compiles
     idx = cls(
         max_degree=16,
         ef_construction=32,
-        insert_batch=INSERT_BATCH,
+        insert_batch=insert_batch,
         build_backend=build_backend,
     )
     t0 = time.perf_counter()
@@ -40,16 +44,92 @@ def _build(cls, items, build_backend: str, clear: bool = False) -> float:
     return time.perf_counter() - t0
 
 
-def run() -> None:
+def phase_split_rows(profile: str, quick: bool) -> list:
+    """Host-driver build with find/commit timed separately per commit
+    backend.  Sizes stay small: the pallas commit is interpret-mode off-TPU.
+    ``profile`` is a benchmarks.common.PROFILES name (resolved to its
+    underlying norm-distribution shape at a phase-split-sized N)."""
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import PROFILES
+    from repro.core.build import (
+        COMMIT_BACKENDS, bootstrap_graph, commit_batch, find_neighbors,
+    )
+    from repro.core.similarity import Similarity, prepare_items
+    from repro.data import mips_dataset
+
+    n, d, batch, md, ef = (600, 24, 64, 8, 16) if quick else (2000, 48, 128, 16, 32)
+    p = dict(PROFILES[profile])
+    p.pop("n_mult", None)
+    raw = jnp.asarray(mips_dataset(n, d, **p))
+    prepared = prepare_items(raw, Similarity.INNER_PRODUCT)
+    norms = jnp.linalg.norm(prepared, axis=-1)
+
     rows = []
-    for profile in PROFILES:
+    for cb in COMMIT_BACKENDS:
+        def one_build(measure: bool):
+            g = bootstrap_graph(
+                prepared, norms, max_degree=md, insert_batch=batch,
+                reverse_links=True, commit_backend=cb,
+            )
+            find_s = commit_s = 0.0
+            start = min(batch, n)
+            while start < n:
+                stop = min(start + batch, n)
+                bids = jnp.arange(start, stop, dtype=jnp.int32)
+                t0 = time.perf_counter()
+                nbr, sc = find_neighbors(
+                    g, prepared[start:stop], max_degree=md, ef=ef,
+                    max_steps=2 * ef,
+                )
+                jax.block_until_ready(nbr)
+                t1 = time.perf_counter()
+                g = commit_batch(
+                    g, bids, nbr, sc, norms, commit_backend=cb
+                )
+                jax.block_until_ready(g.adj)
+                t2 = time.perf_counter()
+                find_s += t1 - t0
+                commit_s += t2 - t1
+                start = stop
+            return (find_s, commit_s) if measure else None
+
+        one_build(measure=False)  # compile warmup
+        find_s, commit_s = one_build(measure=True)
+        total = find_s + commit_s
+        rows.append(dict(
+            bench="build_phase",
+            profile=profile,
+            commit_backend=cb,
+            n=n,
+            dim=d,
+            insert_batch=batch,
+            find_s=round(find_s, 3),
+            commit_s=round(commit_s, 3),
+            commit_share=round(commit_s / total, 3) if total else 0.0,
+        ))
+    return rows
+
+
+def run() -> None:
+    import jax.numpy as jnp
+    from benchmarks.common import DIM, QUICK, dataset, emit
+    from repro.core import IpNSW, IpNSWPlus
+
+    profiles = ("music_like", "word_like")  # gaussian / lognormal norm shapes
+    indexes = {"ipnsw": IpNSW, "ipnsw_plus": IpNSWPlus}
+    build_backends = ("host", "scan")
+    insert_batch = 256 if QUICK else 512
+
+    rows = []
+    for profile in profiles:
         items, _, _ = dataset(profile)
         items = jnp.asarray(items)
         n = items.shape[0]
-        for iname, cls in INDEXES.items():
-            for bb in BUILD_BACKENDS:
-                cold = _build(cls, items, bb, clear=True)
-                warm = _build(cls, items, bb)
+        for iname, cls in indexes.items():
+            for bb in build_backends:
+                cold = _build(cls, items, bb, insert_batch, clear=True)
+                warm = _build(cls, items, bb, insert_batch)
                 rows.append(
                     dict(
                         bench="build",
@@ -58,14 +138,22 @@ def run() -> None:
                         build_backend=bb,
                         n=n,
                         dim=DIM,
-                        insert_batch=INSERT_BATCH,
+                        insert_batch=insert_batch,
                         cold_s=round(cold, 3),
                         warm_s=round(warm, 3),
                         items_per_s=int(n / warm),
                     )
                 )
     emit(rows, header=True)
+    emit(phase_split_rows("word_like", QUICK), header=True)
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (same as REPRO_BENCH_QUICK=1)")
+    args = ap.parse_args()
+    if args.quick:
+        # must land before benchmarks.common is imported: it sizes at import
+        os.environ["REPRO_BENCH_QUICK"] = "1"
     run()

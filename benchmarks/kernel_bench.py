@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import QUICK, emit
 from repro.core import exact_topk
-from repro.core.build import build_graph
+from repro.core.build import COMMIT_BACKENDS, build_graph
 from repro.core.search import STEP_BACKENDS, beam_search
 
 HBM = 819e9
@@ -50,6 +50,7 @@ def run():
             bound="memory" if t_mem > t_mxu else "compute",
         ))
     rows += walk_step_bench()
+    rows += commit_merge_bench()
     emit(rows, header=True)
     return rows
 
@@ -91,6 +92,56 @@ def walk_step_bench():
             bench="walk_step", backend=backend, B=b, N=n, d=d,
             cpu_us_per_query=round(dt / b * 1e6, 1),
             tpu_bound_us=round(int(r.steps) * t_step * 1e6, 3),
+            bound="memory",
+        ))
+    return rows
+
+
+def commit_merge_bench():
+    """Reverse-link commit: the sort-based reference merge vs the fused
+    commit-merge kernel (DESIGN.md §7).
+
+    One row per commit backend over the same [E] proposal table (E = B*M,
+    one insertion batch).  The pallas row is interpret-mode wall time on CPU
+    (correctness-path cost record); ``tpu_bound_us`` is the analytic
+    compiled bound — U touched rows each streaming (M+1) item rows at the
+    128-lane padded width, the fused path's only HBM traffic (the reference
+    additionally sorts the E*(M+1)-row edge table device-wide twice).
+    """
+    n, d, b, m = (1000, 48, 32, 8) if QUICK else (20_000, 64, 256, 16)
+    rng = np.random.default_rng(0)
+    items = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32) / np.sqrt(d))
+    adj = jnp.asarray(rng.integers(-1, n, size=(n, m)).astype(np.int32))
+    e = b * m
+    targets = jnp.asarray(rng.integers(0, n, size=(e,)).astype(np.int32))
+    cands = jnp.asarray(
+        np.repeat(rng.integers(0, n, size=(b,)), m).astype(np.int32)
+    )
+    scores = jnp.asarray(rng.normal(size=(e,)).astype(np.float32))
+    u = int(len(np.unique(np.asarray(targets))))
+    dp = -(-d // 128) * 128
+    t_commit = u * (m + 1) * dp * 4.0 / HBM
+
+    from repro.kernels.commit_merge import commit_merge, commit_merge_ref
+
+    rows = []
+    for backend in COMMIT_BACKENDS:
+        def run_commit():
+            if backend == "pallas":
+                return commit_merge(adj, items, targets, cands, scores,
+                                    max_cands=b)
+            return commit_merge_ref(adj, items, targets, cands, scores)
+
+        jax.block_until_ready(run_commit())  # warm
+        reps = 3 if backend == "reference" else 1
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(run_commit())
+        dt = (time.perf_counter() - t0) / reps
+        rows.append(dict(
+            bench="commit_merge", backend=backend, B=b, N=n, d=d,
+            cpu_us_per_query=round(dt / b * 1e6, 1),
+            tpu_bound_us=round(t_commit * 1e6, 3),
             bound="memory",
         ))
     return rows

@@ -7,14 +7,18 @@ are committed functionally:
 
   forward edges   adj[new] = top-M search results (one row write per item)
   reverse edges   HNSW-style "add reverse link and shrink to M": implemented
-                  as a *segmented top-M merge* — a sort-based algorithm (the
-                  same sort/segment machinery MoE dispatch uses) instead of
-                  per-node locks:
-                    1. build an edge table = (existing edges of every touched
-                       target) ∪ (new reverse candidates)
-                    2. lex-sort by (target, neighbor) to drop duplicate pairs
-                    3. lex-sort by (target, -score), rank within segment,
-                       keep rank < M, scatter rows back
+                  as a *segmented top-M merge* instead of per-node locks,
+                  behind a pluggable commit backend (``commit_backend=``,
+                  see COMMIT_BACKENDS and DESIGN.md §7):
+                    "reference" — kernels/commit_merge/ref.py: sort-based
+                                  (the same sort/segment machinery MoE
+                                  dispatch uses), two device-wide lex-sorts
+                                  over the E·(M+1) edge table
+                    "pallas"    — kernels/commit_merge/ops.py: the fused
+                                  kernel; one E-row bucketing sort, then
+                                  every touched row is gathered, rescored,
+                                  deduped and re-ranked per target tile in
+                                  VMEM (interpret mode off-TPU)
 
 Note on faithfulness: Algorithm 2 as printed uses directed edges only; a
 literal directed build is non-navigable from a fixed entry vertex (see
@@ -41,12 +45,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import GraphIndex, empty_graph
-from repro.core.search import beam_search
+from repro.core.search import STEP_BACKENDS, beam_search
 from repro.core.similarity import Similarity, pair_scores, prepare_items
+from repro.kernels.commit_merge import commit_merge, commit_merge_ref
 
 NEG_INF = jnp.float32(-jnp.inf)
 
 BUILD_BACKENDS = ("host", "scan")
+COMMIT_BACKENDS = ("reference", "pallas")
 
 
 # ---------------------------------------------------------------------------
@@ -54,79 +60,7 @@ BUILD_BACKENDS = ("host", "scan")
 # ---------------------------------------------------------------------------
 
 
-def _segmented_topM_merge(
-    adj: jax.Array,
-    items: jax.Array,
-    targets: jax.Array,   # [E] int32 reverse-edge targets (-1 invalid)
-    cands: jax.Array,     # [E] int32 candidate neighbors (the new items)
-    scores: jax.Array,    # [E] fp32 s(target, cand)
-) -> jax.Array:
-    """Merge reverse-edge candidates into the adjacency rows of ``targets``,
-    keeping each row's top-M by similarity.  Fully vectorized."""
-    n, m = adj.shape
-    e = targets.shape[0]
-    big = jnp.int32(n + 1)
-
-    # --- existing edges of touched targets (contributed once per target) ----
-    order = jnp.argsort(jnp.where(targets >= 0, targets, big))
-    t_s = targets[order]
-    c_s = cands[order]
-    s_s = scores[order]
-    first = jnp.concatenate(
-        [jnp.ones((1,), bool), t_s[1:] != t_s[:-1]]
-    ) & (t_s >= 0)
-
-    safe_t = jnp.maximum(t_s, 0)
-    ex_ids = adj[safe_t]                                   # [E, M]
-    ex_valid = (ex_ids >= 0) & first[:, None]
-    ex_vecs = items[jnp.maximum(ex_ids, 0)]                # [E, M, d]
-    t_vecs = items[safe_t]                                 # [E, d]
-    ex_scores = jnp.einsum(
-        "ed,emd->em", t_vecs, ex_vecs, preferred_element_type=jnp.float32
-    )
-
-    # --- edge table ---------------------------------------------------------
-    tab_t = jnp.concatenate([t_s, jnp.broadcast_to(t_s[:, None], (e, m)).reshape(-1)])
-    tab_c = jnp.concatenate([c_s, ex_ids.reshape(-1)])
-    tab_s = jnp.concatenate([s_s, ex_scores.reshape(-1)])
-    tab_v = jnp.concatenate([t_s >= 0, ex_valid.reshape(-1)])
-    tab_v &= tab_c >= 0
-
-    # --- pass 1: drop duplicate (target, neighbor) pairs --------------------
-    k1 = jnp.where(tab_v, tab_t, big)
-    k2 = jnp.where(tab_v, tab_c, big)
-    k1, k2, tab_t, tab_c, tab_s, tab_v = jax.lax.sort(
-        (k1, k2, tab_t, tab_c, tab_s, tab_v), num_keys=2, is_stable=True
-    )
-    dup = jnp.concatenate(
-        [jnp.zeros((1,), bool), (k1[1:] == k1[:-1]) & (k2[1:] == k2[:-1])]
-    )
-    tab_v &= ~dup
-
-    # --- pass 2: rank by score within each target segment -------------------
-    k1 = jnp.where(tab_v, tab_t, big)
-    nk = jnp.where(tab_v, -tab_s, jnp.float32(jnp.inf))
-    k1, nk, tab_t, tab_c, tab_v = jax.lax.sort(
-        (k1, nk, tab_t, tab_c, tab_v), num_keys=2, is_stable=True
-    )
-    r = tab_t.shape[0]
-    idx = jnp.arange(r, dtype=jnp.int32)
-    seg_first = jnp.concatenate([jnp.ones((1,), bool), k1[1:] != k1[:-1]])
-    seg_start = jax.lax.cummax(jnp.where(seg_first, idx, 0))
-    rank = idx - seg_start
-    keep = tab_v & (rank < m)
-
-    # --- scatter rows back (touched rows fully rewritten) --------------------
-    adj_pad = jnp.concatenate([adj, jnp.full((1, m), -1, adj.dtype)], axis=0)
-    row = jnp.where(first, safe_t, n)
-    adj_pad = adj_pad.at[row].set(-1)  # clear touched rows (dummy row n absorbs)
-    wr = jnp.where(keep, tab_t, n)
-    wc = jnp.where(keep, rank, 0)
-    adj_pad = adj_pad.at[wr, wc].set(jnp.where(keep, tab_c, -1))
-    return adj_pad[:n]
-
-
-@functools.partial(jax.jit, static_argnames=("reverse_links",))
+@functools.partial(jax.jit, static_argnames=("reverse_links", "commit_backend"))
 def commit_batch(
     graph: GraphIndex,
     batch_ids: jax.Array,    # [B] int32 ids being inserted
@@ -135,13 +69,27 @@ def commit_batch(
     norms: jax.Array,        # [N] fp32 (for entry maintenance)
     valid: Optional[jax.Array] = None,  # [B] bool, False = pad row (skipped)
     reverse_links: bool = True,
+    commit_backend: str = "reference",
 ) -> GraphIndex:
     """Write one insertion batch into the graph (forward + reverse edges) and
     advance size/entry.  ``valid`` masks pad rows of a fixed-shape batch (the
     scan backend's tail batch); masked rows contribute no edges and no size
     advance, so a padded batch commits bit-identically to its ragged slice.
     Callers that pass ``valid`` must already have masked pad rows of
-    ``nbr_ids`` to -1 (keeps them out of the reverse-edge table)."""
+    ``nbr_ids`` to -1 (keeps them out of the reverse-edge table).
+
+    ``commit_backend`` selects the reverse-link merge implementation
+    (COMMIT_BACKENDS; both are bit-identical — tests/test_kernel_parity.py).
+
+    Entry maintenance is an O(B) compare of the batch's max-norm insert
+    against the carried ``graph.entry_norm`` — equivalent to the historical
+    full [N] masked argmax whenever ids are inserted in ascending order (all
+    build drivers; pinned in tests/test_build_parity.py)."""
+    if commit_backend not in COMMIT_BACKENDS:
+        raise ValueError(
+            f"commit_backend must be one of {COMMIT_BACKENDS}, "
+            f"got {commit_backend!r}"
+        )
     n, m = graph.adj.shape
     b = batch_ids.shape[0]
 
@@ -157,11 +105,28 @@ def commit_batch(
         targets = nbr_ids.reshape(-1)
         cands = jnp.broadcast_to(batch_ids[:, None], (b, m)).reshape(-1)
         scores = nbr_scores.reshape(-1)
-        adj = _segmented_topM_merge(adj, graph.items, targets, cands, scores)
+        if commit_backend == "pallas":
+            adj = commit_merge(
+                adj, graph.items, targets, cands, scores, max_cands=b
+            )
+        else:
+            adj = commit_merge_ref(adj, graph.items, targets, cands, scores)
 
-    inserted = jnp.arange(n) < size
-    entry = jnp.argmax(jnp.where(inserted, norms, -jnp.inf)).astype(jnp.int32)
-    return GraphIndex(adj=adj, items=graph.items, size=size, entry=entry)
+    b_norms = jnp.take(norms, batch_ids)
+    if valid is not None:
+        b_norms = jnp.where(valid, b_norms, NEG_INF)
+    best = jnp.argmax(b_norms)  # first max = smallest id (ids ascend in-batch)
+    prev_norm = (
+        graph.entry_norm if graph.entry_norm is not None
+        else jnp.take(norms, graph.entry)  # legacy graphs without the carry
+    ).astype(jnp.float32)
+    take = b_norms[best] > prev_norm
+    entry = jnp.where(take, batch_ids[best], graph.entry).astype(jnp.int32)
+    entry_norm = jnp.where(take, b_norms[best], prev_norm)
+    return GraphIndex(
+        adj=adj, items=graph.items, size=size, entry=entry,
+        entry_norm=entry_norm,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -245,6 +210,7 @@ def bootstrap_graph(
     max_degree: int,
     insert_batch: int,
     reverse_links: bool,
+    commit_backend: str = "reference",
 ) -> GraphIndex:
     """Empty graph + the sequential-prefix first batch (shared by backends)."""
     n = prepared.shape[0]
@@ -252,13 +218,17 @@ def bootstrap_graph(
     first = min(insert_batch, n)
     ids0 = jnp.arange(first, dtype=jnp.int32)
     nbr0, sc0 = _bootstrap_neighbors(prepared[:first], max_degree)
-    return commit_batch(graph, ids0, nbr0, sc0, norms, reverse_links=reverse_links)
+    return commit_batch(
+        graph, ids0, nbr0, sc0, norms, reverse_links=reverse_links,
+        commit_backend=commit_backend,
+    )
 
 
 def _scan_insert(
     adj: jax.Array,
     size: jax.Array,
     entry: jax.Array,
+    entry_norm: jax.Array,
     prepared: jax.Array,
     norms: jax.Array,
     batch_ids: jax.Array,    # [T, B] int32 (tail clamped)
@@ -269,20 +239,24 @@ def _scan_insert(
     max_steps: int,
     reverse_links: bool,
     backend: str,
+    commit_backend: str,
 ):
     """All remaining insertion batches as one ``lax.scan``.
 
-    Carry = (adj, size, entry); items/norms are closed over (never copied).
-    Pad rows of the tail batch run real (masked-out) walks, and the done
-    flag of ``beam_search`` freezes finished queries, so every valid row's
-    neighbors — and therefore the committed graph — are bit-identical to
-    the host loop's ragged batches.
+    Carry = (adj, size, entry, entry_norm); items/norms are closed over
+    (never copied).  Pad rows of the tail batch run real (masked-out) walks,
+    and the done flag of ``beam_search`` freezes finished queries, so every
+    valid row's neighbors — and therefore the committed graph — are
+    bit-identical to the host loop's ragged batches.
     """
 
     def body(carry, xs):
-        adj, size, entry = carry
+        adj, size, entry, entry_norm = carry
         bids, vmask = xs
-        graph = GraphIndex(adj=adj, items=prepared, size=size, entry=entry)
+        graph = GraphIndex(
+            adj=adj, items=prepared, size=size, entry=entry,
+            entry_norm=entry_norm,
+        )
         nbr, sc = find_neighbors(
             graph,
             jnp.take(prepared, bids, axis=0),
@@ -294,21 +268,25 @@ def _scan_insert(
         nbr = jnp.where(vmask[:, None], nbr, -1)
         sc = jnp.where(vmask[:, None], sc, NEG_INF)
         g = commit_batch(
-            graph, bids, nbr, sc, norms, valid=vmask, reverse_links=reverse_links
+            graph, bids, nbr, sc, norms, valid=vmask,
+            reverse_links=reverse_links, commit_backend=commit_backend,
         )
-        return (g.adj, g.size, g.entry), None
+        return (g.adj, g.size, g.entry, g.entry_norm), None
 
-    (adj, size, entry), _ = jax.lax.scan(
-        body, (adj, size, entry), (batch_ids, batch_valid)
+    (adj, size, entry, entry_norm), _ = jax.lax.scan(
+        body, (adj, size, entry, entry_norm), (batch_ids, batch_valid)
     )
-    return adj, size, entry
+    return adj, size, entry, entry_norm
 
 
 # Single-index entry point: the adjacency carry is donated, so the only full
 # [N, M] buffer alive during the build is the one XLA updates in place.
 _scan_insert_jit = functools.partial(
     jax.jit,
-    static_argnames=("max_degree", "ef", "max_steps", "reverse_links", "backend"),
+    static_argnames=(
+        "max_degree", "ef", "max_steps", "reverse_links", "backend",
+        "commit_backend",
+    ),
     donate_argnums=(0,),
 )(_scan_insert)
 
@@ -325,8 +303,9 @@ def scan_build_arrays(
     insert_batch: int,
     reverse_links: bool,
     backend: str,
+    commit_backend: str = "reference",
 ):
-    """Fully-traced build (bootstrap + scan) -> (adj, size, entry).
+    """Fully-traced build (bootstrap + scan) -> (adj, size, entry, entry_norm).
 
     Pure function of arrays: ``build_sharded`` vmaps it over a leading shard
     axis so all P shard graphs build inside one device program.
@@ -337,11 +316,14 @@ def scan_build_arrays(
         max_degree=max_degree,
         insert_batch=insert_batch,
         reverse_links=reverse_links,
+        commit_backend=commit_backend,
     )
     return _scan_insert(
-        g.adj, g.size, g.entry, prepared, norms, batch_ids, batch_valid,
+        g.adj, g.size, g.entry, g.entry_norm, prepared, norms,
+        batch_ids, batch_valid,
         max_degree=max_degree, ef=ef, max_steps=max_steps,
         reverse_links=reverse_links, backend=backend,
+        commit_backend=commit_backend,
     )
 
 
@@ -357,6 +339,7 @@ def build_graph(
     neighbor_fn: Optional[Callable] = None,
     backend: str = "reference",
     build_backend: str = "host",
+    commit_backend: str = "reference",
     progress: bool = False,
 ) -> GraphIndex:
     """Build an NSW proximity graph for ``items`` under ``similarity``.
@@ -366,11 +349,22 @@ def build_graph(
     ``backend`` selects the walk step backend for insertion searches
     (see search.STEP_BACKENDS); ``build_backend`` selects the insertion
     driver ("host" Python loop | "scan" single-compile lax.scan, see
-    BUILD_BACKENDS and DESIGN.md §6).
+    BUILD_BACKENDS and DESIGN.md §6); ``commit_backend`` selects the
+    reverse-link merge kernel (COMMIT_BACKENDS, DESIGN.md §7).  All three
+    are validated eagerly, before any build work starts.
     """
     if build_backend not in BUILD_BACKENDS:
         raise ValueError(
             f"build_backend must be one of {BUILD_BACKENDS}, got {build_backend!r}"
+        )
+    if backend not in STEP_BACKENDS:
+        raise ValueError(
+            f"backend must be one of {STEP_BACKENDS}, got {backend!r}"
+        )
+    if commit_backend not in COMMIT_BACKENDS:
+        raise ValueError(
+            f"commit_backend must be one of {COMMIT_BACKENDS}, "
+            f"got {commit_backend!r}"
         )
     prepared = prepare_items(jnp.asarray(items), similarity)
     n = prepared.shape[0]
@@ -386,22 +380,27 @@ def build_graph(
             )
         graph = bootstrap_graph(
             prepared, norms, max_degree=max_degree, insert_batch=insert_batch,
-            reverse_links=reverse_links,
+            reverse_links=reverse_links, commit_backend=commit_backend,
         )
         _, bids, valid = batch_schedule(n, insert_batch)
         if bids.shape[0]:
-            adj, size, entry = _scan_insert_jit(
-                graph.adj, graph.size, graph.entry, prepared, norms,
+            adj, size, entry, entry_norm = _scan_insert_jit(
+                graph.adj, graph.size, graph.entry, graph.entry_norm,
+                prepared, norms,
                 jnp.asarray(bids), jnp.asarray(valid),
                 max_degree=max_degree, ef=ef_construction, max_steps=steps,
                 reverse_links=reverse_links, backend=backend,
+                commit_backend=commit_backend,
             )
-            graph = GraphIndex(adj=adj, items=prepared, size=size, entry=entry)
+            graph = GraphIndex(
+                adj=adj, items=prepared, size=size, entry=entry,
+                entry_norm=entry_norm,
+            )
         return graph
 
     graph = bootstrap_graph(
         prepared, norms, max_degree=max_degree, insert_batch=insert_batch,
-        reverse_links=reverse_links,
+        reverse_links=reverse_links, commit_backend=commit_backend,
     )
 
     start = min(insert_batch, n)
@@ -420,7 +419,10 @@ def build_graph(
             )
         else:
             nbr, sc = neighbor_fn(graph, batch_items)
-        graph = commit_batch(graph, bids, nbr, sc, norms, reverse_links=reverse_links)
+        graph = commit_batch(
+            graph, bids, nbr, sc, norms, reverse_links=reverse_links,
+            commit_backend=commit_backend,
+        )
         if progress and (start // insert_batch) % 20 == 0:
             print(f"  inserted {stop}/{n}")
         start = stop

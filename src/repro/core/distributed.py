@@ -83,7 +83,8 @@ def build_sharded(
     scan build per ``index_kwargs``); ``"scan"`` vmaps the fully-traced scan
     build over the shard axis, so all P shard graphs build inside ONE device
     program.  ``index_kwargs`` are IpNSW / IpNSWPlus constructor fields
-    (including ``backend=`` for the insertion walks)."""
+    (including ``backend=`` for the insertion walks and ``commit_backend=``
+    for the reverse-link merge kernel)."""
     from repro.core.ipnsw import IpNSW
     from repro.core.ipnsw_plus import IpNSWPlus
 
@@ -153,12 +154,16 @@ def _build_sharded_scan(
             insert_batch=proto.insert_batch,
             reverse_links=proto.reverse_links,
             backend=proto.backend,
+            commit_backend=proto.commit_backend,
         )
-        a_adj, a_size, a_entry, i_adj, i_size, i_entry = jax.jit(
+        (a_adj, a_size, a_entry, a_enorm,
+         i_adj, i_size, i_entry, i_enorm) = jax.jit(
             jax.vmap(lambda it, ai, no, an: fn(it, ai, no, an, bids, valid))
         )(stacked, ang_items, norms, ang_norms)
-        ip = GraphIndex(adj=i_adj, items=stacked, size=i_size, entry=i_entry)
-        ang = GraphIndex(adj=a_adj, items=ang_items, size=a_size, entry=a_entry)
+        ip = GraphIndex(adj=i_adj, items=stacked, size=i_size, entry=i_entry,
+                        entry_norm=i_enorm)
+        ang = GraphIndex(adj=a_adj, items=ang_items, size=a_size,
+                         entry=a_entry, entry_norm=a_enorm)
         return ShardedIndex(ip=ip, ang=ang, offset=offsets, count=count)
 
     fn = functools.partial(
@@ -169,11 +174,13 @@ def _build_sharded_scan(
         insert_batch=proto.insert_batch,
         reverse_links=proto.reverse_links,
         backend=proto.backend,
+        commit_backend=proto.commit_backend,
     )
-    adj, size, entry = jax.jit(
+    adj, size, entry, enorm = jax.jit(
         jax.vmap(lambda it, no: fn(it, no, bids, valid))
     )(stacked, norms)
-    ip = GraphIndex(adj=adj, items=stacked, size=size, entry=entry)
+    ip = GraphIndex(adj=adj, items=stacked, size=size, entry=entry,
+                    entry_norm=enorm)
     return ShardedIndex(ip=ip, ang=None, offset=offsets, count=count)
 
 

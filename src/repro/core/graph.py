@@ -10,7 +10,7 @@ shards row-wise across the ``model`` mesh axis.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,12 +25,18 @@ class GraphIndex(NamedTuple):
             pre-transformed, e.g. normalized for the angular graph).
     size:   [] int32, number of inserted items (rows >= size are empty).
     entry:  [] int32, entry vertex id for graph walks.
+    entry_norm: [] fp32, norm of the entry vertex (-inf while empty).
+            Carried so ``commit_batch`` advances the max-norm entry with an
+            O(B) compare against the batch instead of a full [N] masked
+            argmax.  ``None`` on legacy instances — consumers fall back to
+            gathering ``norms[entry]``.
     """
 
     adj: jax.Array
     items: jax.Array
     size: jax.Array
     entry: jax.Array
+    entry_norm: Optional[jax.Array] = None
 
     @property
     def capacity(self) -> int:
@@ -49,6 +55,7 @@ def empty_graph(items: jax.Array, max_degree: int) -> GraphIndex:
         items=items,
         size=jnp.zeros((), jnp.int32),
         entry=jnp.zeros((), jnp.int32),
+        entry_norm=jnp.full((), -jnp.inf, jnp.float32),
     )
 
 

@@ -63,6 +63,7 @@ class HierarchicalIpNSW:
     seed: int = 0
     backend: str = "reference"       # walk step backend (search.STEP_BACKENDS)
     build_backend: str = "host"      # insertion driver (build.BUILD_BACKENDS)
+    commit_backend: str = "reference"  # reverse-link merge (COMMIT_BACKENDS)
     levels: List[GraphIndex] = field(default_factory=list)
     ids: List[np.ndarray] = field(default_factory=list)       # level -> global ids
     inv: List[np.ndarray] = field(default_factory=list)       # global -> local (-1)
@@ -88,6 +89,7 @@ class HierarchicalIpNSW:
                 insert_batch=self.insert_batch,
                 backend=self.backend,
                 build_backend=self.build_backend,
+                commit_backend=self.commit_backend,
                 progress=progress and level == 0,
             )
             inv = np.full(n, -1, np.int32)

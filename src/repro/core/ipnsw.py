@@ -46,7 +46,8 @@ class IpNSW:
     = candidate-pool size l used during insertion.  ``backend`` selects the
     walk step implementation ("reference" | "pallas", see search.py);
     ``build_backend`` selects the insertion driver ("host" | "scan", see
-    build.BUILD_BACKENDS).
+    build.BUILD_BACKENDS); ``commit_backend`` selects the reverse-link merge
+    kernel ("reference" | "pallas", see build.COMMIT_BACKENDS).
     """
 
     max_degree: int = 16
@@ -55,6 +56,7 @@ class IpNSW:
     reverse_links: bool = True
     backend: str = "reference"
     build_backend: str = "host"
+    commit_backend: str = "reference"
     graph: Optional[GraphIndex] = None
 
     def build(self, items: jax.Array, progress: bool = False) -> "IpNSW":
@@ -67,6 +69,7 @@ class IpNSW:
             reverse_links=self.reverse_links,
             backend=self.backend,
             build_backend=self.build_backend,
+            commit_backend=self.commit_backend,
             progress=progress,
         )
         return self

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.core.build import (
     BUILD_BACKENDS,
+    COMMIT_BACKENDS,
     _bootstrap_neighbors,
     batch_schedule,
     commit_batch,
@@ -135,6 +136,7 @@ class IpNSWPlus:
     reverse_links: bool = True
     backend: str = "reference"    # walk step backend (search.STEP_BACKENDS)
     build_backend: str = "host"   # insertion driver (build.BUILD_BACKENDS)
+    commit_backend: str = "reference"  # reverse-link merge (COMMIT_BACKENDS)
     ang_graph: Optional[GraphIndex] = field(default=None)
     ip_graph: Optional[GraphIndex] = field(default=None)
 
@@ -145,6 +147,17 @@ class IpNSWPlus:
             raise ValueError(
                 f"build_backend must be one of {BUILD_BACKENDS}, "
                 f"got {self.build_backend!r}"
+            )
+        from repro.core.search import STEP_BACKENDS
+
+        if self.backend not in STEP_BACKENDS:
+            raise ValueError(
+                f"backend must be one of {STEP_BACKENDS}, got {self.backend!r}"
+            )
+        if self.commit_backend not in COMMIT_BACKENDS:
+            raise ValueError(
+                f"commit_backend must be one of {COMMIT_BACKENDS}, "
+                f"got {self.commit_backend!r}"
             )
         items = jnp.asarray(items)
         n = items.shape[0]
@@ -165,10 +178,12 @@ class IpNSWPlus:
                 insert_batch=self.insert_batch,
                 reverse_links=self.reverse_links,
                 backend=self.backend,
+                commit_backend=self.commit_backend,
             )
-            (a_adj, a_size, a_entry, i_adj, i_size, i_entry) = arrays
-            self.ang_graph = GraphIndex(a_adj, ang_items, a_size, a_entry)
-            self.ip_graph = GraphIndex(i_adj, items, i_size, i_entry)
+            (a_adj, a_size, a_entry, a_enorm,
+             i_adj, i_size, i_entry, i_enorm) = arrays
+            self.ang_graph = GraphIndex(a_adj, ang_items, a_size, a_entry, a_enorm)
+            self.ip_graph = GraphIndex(i_adj, items, i_size, i_entry, i_enorm)
             return self
 
         ang = empty_graph(ang_items, self.ang_degree)
@@ -178,11 +193,15 @@ class IpNSWPlus:
         ids0 = jnp.arange(first, dtype=jnp.int32)
         a_nbr0, a_sc0 = _bootstrap_neighbors(ang_items[:first], self.ang_degree)
         ang = commit_batch(
-            ang, ids0, a_nbr0, a_sc0, ang_norms, reverse_links=self.reverse_links
+            ang, ids0, a_nbr0, a_sc0, ang_norms,
+            reverse_links=self.reverse_links,
+            commit_backend=self.commit_backend,
         )
         g_nbr0, g_sc0 = _bootstrap_neighbors(items[:first], self.max_degree)
         ip = commit_batch(
-            ip, ids0, g_nbr0, g_sc0, norms, reverse_links=self.reverse_links
+            ip, ids0, g_nbr0, g_sc0, norms,
+            reverse_links=self.reverse_links,
+            commit_backend=self.commit_backend,
         )
 
         ang_steps = 2 * max(self.ang_ef, self.ang_degree)
@@ -203,7 +222,9 @@ class IpNSWPlus:
                 backend=self.backend,
             )
             ang = commit_batch(
-                ang, bids, a_nbr, a_sc, ang_norms, reverse_links=self.reverse_links
+                ang, bids, a_nbr, a_sc, ang_norms,
+                reverse_links=self.reverse_links,
+                commit_backend=self.commit_backend,
             )
 
             # 2. insert into the ip graph with the ip-NSW+ search itself:
@@ -218,7 +239,9 @@ class IpNSWPlus:
                 backend=self.backend,
             )
             ip = commit_batch(
-                ip, bids, g_nbr, g_sc, norms, reverse_links=self.reverse_links
+                ip, bids, g_nbr, g_sc, norms,
+                reverse_links=self.reverse_links,
+                commit_backend=self.commit_backend,
             )
 
             if progress and (start // self.insert_batch) % 20 == 0:
@@ -313,12 +336,14 @@ def scan_build_plus_arrays(
     insert_batch: int,
     reverse_links: bool,
     backend: str,
+    commit_backend: str = "reference",
 ):
     """Fully-traced ip-NSW+ build: bootstrap both graphs, then one
     ``lax.scan`` whose carry holds *both* adjacencies, so the §4.2
     interleaving (angular insert -> angular-seeded ip insert) survives
     intact with zero host round-trips.  Returns
-    ``(ang_adj, ang_size, ang_entry, ip_adj, ip_size, ip_entry)``.
+    ``(ang_adj, ang_size, ang_entry, ang_entry_norm,
+       ip_adj, ip_size, ip_entry, ip_entry_norm)``.
     ``build_sharded`` vmaps this over a leading shard axis."""
     n = items.shape[0]
     ang = empty_graph(ang_items, ang_degree)
@@ -327,18 +352,25 @@ def scan_build_plus_arrays(
     first = min(insert_batch, n)
     ids0 = jnp.arange(first, dtype=jnp.int32)
     a_nbr0, a_sc0 = _bootstrap_neighbors(ang_items[:first], ang_degree)
-    ang = commit_batch(ang, ids0, a_nbr0, a_sc0, ang_norms, reverse_links=reverse_links)
+    ang = commit_batch(
+        ang, ids0, a_nbr0, a_sc0, ang_norms, reverse_links=reverse_links,
+        commit_backend=commit_backend,
+    )
     g_nbr0, g_sc0 = _bootstrap_neighbors(items[:first], max_degree)
-    ip = commit_batch(ip, ids0, g_nbr0, g_sc0, norms, reverse_links=reverse_links)
+    ip = commit_batch(
+        ip, ids0, g_nbr0, g_sc0, norms, reverse_links=reverse_links,
+        commit_backend=commit_backend,
+    )
 
     ang_steps = 2 * max(ang_ef, ang_degree)
     ip_steps = 2 * ef_construction
 
     def body(carry, xs):
-        a_adj, a_size, a_entry, i_adj, i_size, i_entry = carry
+        (a_adj, a_size, a_entry, a_enorm,
+         i_adj, i_size, i_entry, i_enorm) = carry
         bids, vmask = xs
-        ang_g = GraphIndex(a_adj, ang_items, a_size, a_entry)
-        ip_g = GraphIndex(i_adj, items, i_size, i_entry)
+        ang_g = GraphIndex(a_adj, ang_items, a_size, a_entry, a_enorm)
+        ip_g = GraphIndex(i_adj, items, i_size, i_entry, i_enorm)
 
         # 1. insert into the angular graph (plain Algorithm 2)
         a_nbr, a_sc = find_neighbors(
@@ -354,6 +386,7 @@ def scan_build_plus_arrays(
             jnp.where(vmask[:, None], a_nbr, -1),
             jnp.where(vmask[:, None], a_sc, NEG_INF),
             ang_norms, valid=vmask, reverse_links=reverse_links,
+            commit_backend=commit_backend,
         )
 
         # 2. insert into the ip graph with the ip-NSW+ search itself,
@@ -373,10 +406,13 @@ def scan_build_plus_arrays(
             jnp.where(vmask[:, None], g_nbr, -1),
             jnp.where(vmask[:, None], g_sc, NEG_INF),
             norms, valid=vmask, reverse_links=reverse_links,
+            commit_backend=commit_backend,
         )
-        return (ang2.adj, ang2.size, ang2.entry, ip2.adj, ip2.size, ip2.entry), None
+        return (ang2.adj, ang2.size, ang2.entry, ang2.entry_norm,
+                ip2.adj, ip2.size, ip2.entry, ip2.entry_norm), None
 
-    carry = (ang.adj, ang.size, ang.entry, ip.adj, ip.size, ip.entry)
+    carry = (ang.adj, ang.size, ang.entry, ang.entry_norm,
+             ip.adj, ip.size, ip.entry, ip.entry_norm)
     if batch_ids.shape[0]:
         carry, _ = jax.lax.scan(body, carry, (batch_ids, batch_valid))
     return carry
@@ -388,6 +424,6 @@ _scan_build_plus_jit = functools.partial(
     jax.jit,
     static_argnames=(
         "max_degree", "ef_construction", "ang_degree", "ang_ef", "k_angular",
-        "insert_batch", "reverse_links", "backend",
+        "insert_batch", "reverse_links", "backend", "commit_backend",
     ),
 )(scan_build_plus_arrays)

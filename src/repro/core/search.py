@@ -155,6 +155,13 @@ def beam_search(
               ip-graph neighborhood of the angular search results (Alg 3).
     backend:  "reference" | "pallas" — which step_fn runs the loop body.
     """
+    # Validate eagerly, before seeding does any work: a typo'd backend must
+    # not survive until make_step_fn resolves it mid-trace (by which point a
+    # build driver may have minutes of committed batches behind it).
+    if backend not in STEP_BACKENDS:
+        raise ValueError(
+            f"backend must be one of {STEP_BACKENDS}, got {backend!r}"
+        )
     adj, items = graph.adj, graph.items
     B, S = init_ids.shape
     M = adj.shape[1]

@@ -6,4 +6,7 @@ on CPU; TPU is the compile target).
   topk_merge   — in-VMEM candidate-pool merge (Algorithm 1 line 7-8)
   beam_step    — fused full Algorithm-1 iteration (select + gather + dedup +
                  score + merge in VMEM); the "pallas" walk backend (DESIGN §3)
+  commit_merge — fused reverse-link top-M merge of the Algorithm-2 batched
+                 commit (bucket + gather + rescore + dedup + rank per target
+                 tile in VMEM); the "pallas" commit backend (DESIGN §7)
 """

@@ -1,0 +1,4 @@
+from repro.kernels.commit_merge.ops import commit_merge
+from repro.kernels.commit_merge.ref import commit_merge_ref
+
+__all__ = ["commit_merge", "commit_merge_ref"]

@@ -1,0 +1,189 @@
+"""Fused commit-merge Pallas TPU kernel — the reverse-link top-M merge of the
+batched Algorithm-2 commit, one target row per grid step, entirely in VMEM.
+
+The reference path (``commit_merge_ref``) builds an ``E·(M+1)``-row edge
+table (every proposal plus every existing edge of every touched target) and
+pushes it through TWO device-wide ``lax.sort`` passes, materializing the
+``[E, M, d]`` gathered neighbor vectors and the full table in HBM between
+stages.  Here the wrapper (``ops.py``) buckets only the ``E`` proposals to
+target tiles with ONE E-row sort, and each grid step finishes one touched
+row on-chip:
+
+  1. DMA the target's adjacency row HBM->SMEM (scalar ids for the gather
+     loop) and HBM->VMEM (vector lanes), and the target's item vector
+     HBM->VMEM;
+  2. DMA the M existing-neighbor item rows HBM->VMEM — all copies started
+     before any wait, so on TPU the fetches overlap (same explicit-DMA idiom
+     as ``beam_step``: the ids are read from the row *inside* the kernel, so
+     a scalar-prefetch BlockSpec cannot express them);
+  3. rescore the existing edges against the target vector (MXU), drop
+     existing slots that duplicate a proposal (the proposal's score wins)
+     or an earlier existing slot;
+  4. rank proposals + surviving existing edges with the ``ranked_top_m``
+     selection network and write the row's new top-M ids.
+
+Only the final ``[1, M]`` id row returns to HBM per step.  Pad steps
+(``target < 0`` — the bucket table is sized for the worst case of all-unique
+targets) skip every DMA and emit an all ``-1`` row that the wrapper scatters
+into a dummy row.
+
+VMEM budget per step: (M+1)·dp·4 (target + neighbor rows) + (2K + 3M) words
+— ~12 KB for M=16, dp=128, K=512; far under the ~16 MB/core limit, so a
+later revision could tile many targets per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def ranked_top_m(ids, scores, valid, m: int):
+    """Top-``m`` of ``[B, C]`` candidates by (score desc, id asc), honoring an
+    explicit ``valid`` mask.  Returns ``[B, m]`` int32 ids, ``-1`` padded.
+
+    Differs from ``topk_merge.masked_top_l`` in two contract points that the
+    commit merge needs: ties resolve by *smallest id* (the reference's stable
+    rank over the (target, cand)-sorted table), not by slot position, and a
+    valid slot may carry ``-inf`` and still outrank emptiness (the reference
+    keeps valid ``-inf``-score edges when the row has spare capacity).
+    Requires ids unique among valid slots — one hit per pass, like the
+    reference's deduped table.  Statically unrolled compare/select trees.
+    """
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    avail = valid
+    out = []
+    for _ in range(m):
+        has = jnp.any(avail, axis=1)
+        mx = jnp.max(jnp.where(avail, scores, NEG_INF), axis=1)
+        tied = avail & (scores == mx[:, None])
+        cmin = jnp.min(jnp.where(tied, ids, big), axis=1)
+        hit = tied & (ids == cmin[:, None])
+        out.append(jnp.where(has, cmin, -1))
+        avail &= ~hit
+    return jnp.stack(out, axis=1).astype(jnp.int32)
+
+
+def _commit_merge_kernel(
+    tgt_ref, bi_ref, bs_ref,          # VMEM-blocked inputs (one target tile)
+    adj_hbm, items_hbm,               # whole arrays, ANY/HBM
+    out_ref,                          # [1, M] new row ids
+    adj_smem, adj_vmem, tvec_ref, rows_ref, sems,
+    *,
+    m: int,
+):
+    t = tgt_ref[0, 0]
+    live = t >= 0
+    tsafe = jnp.maximum(t, 0)
+
+    # Pad steps skip all DMA: their outputs are fully masked by ``live``
+    # below, so stale/uninitialized scratch contents are never observable.
+    @pl.when(live)
+    def _fetch():
+        # --- 1. adjacency row (SMEM scalars + VMEM lanes) + target vector ---
+        adj_s = pltpu.make_async_copy(
+            adj_hbm.at[pl.ds(tsafe, 1), :], adj_smem, sems.at[m]
+        )
+        adj_v = pltpu.make_async_copy(
+            adj_hbm.at[pl.ds(tsafe, 1), :], adj_vmem, sems.at[m + 1]
+        )
+        tv = pltpu.make_async_copy(
+            items_hbm.at[pl.ds(tsafe, 1), :], tvec_ref, sems.at[m + 2]
+        )
+        adj_s.start()
+        adj_v.start()
+        tv.start()
+        adj_s.wait()
+        adj_v.wait()
+
+        # --- 2. gather the M existing-neighbor rows (start all, wait all) ---
+        def _row_copy(j):
+            nid = jnp.maximum(adj_smem[0, j], 0)
+            return pltpu.make_async_copy(
+                items_hbm.at[pl.ds(nid, 1), :], rows_ref.at[pl.ds(j, 1), :],
+                sems.at[j],
+            )
+
+        jax.lax.fori_loop(0, m, lambda j, c: (_row_copy(j).start(), c)[1], 0)
+        jax.lax.fori_loop(0, m, lambda j, c: (_row_copy(j).wait(), c)[1], 0)
+        tv.wait()
+
+    # --- 3. dedup + rescore — all in VMEM -----------------------------------
+    new_ids = bi_ref[...]                             # [1, K] (-1 padded)
+    new_valid = (new_ids >= 0) & live
+    new_scores = jnp.where(new_valid, bs_ref[...], NEG_INF)
+
+    ex_ids = adj_vmem[...]                            # [1, M]
+    # existing slot duplicated by a proposal -> dropped (proposal score wins)
+    in_new = (
+        (ex_ids[:, :, None] == new_ids[:, None, :]) & new_valid[:, None, :]
+    ).any(axis=-1)
+    # existing slot repeating an earlier existing slot -> dropped (keep first)
+    eq = ex_ids[:, :, None] == ex_ids[:, None, :]
+    jj = jax.lax.broadcasted_iota(jnp.int32, (1, m, m), 1)
+    kk = jax.lax.broadcasted_iota(jnp.int32, (1, m, m), 2)
+    ex_dup = (eq & (kk < jj)).any(axis=-1)
+    ex_valid = (ex_ids >= 0) & live & ~in_new & ~ex_dup
+
+    ex_scores = jax.lax.dot_general(
+        tvec_ref[...], rows_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                 # [1, M]
+    ex_scores = jnp.where(ex_valid, ex_scores, NEG_INF)
+
+    # --- 4. rank and rewrite the row ----------------------------------------
+    cand_i = jnp.concatenate(
+        [jnp.where(new_valid, new_ids, -1), jnp.where(ex_valid, ex_ids, -1)],
+        axis=1,
+    )
+    cand_s = jnp.concatenate([new_scores, ex_scores], axis=1)
+    cand_v = jnp.concatenate([new_valid, ex_valid], axis=1)
+    out_ref[...] = ranked_top_m(cand_i, cand_s, cand_v, m)
+
+
+def commit_merge_pallas(
+    utgt: jax.Array,          # [G, 1] int32 unique targets (-1 pad steps)
+    bucket_ids: jax.Array,    # [G, K] int32 deduped proposal ids (-1 padded)
+    bucket_scores: jax.Array, # [G, K] fp32 proposal scores
+    adj: jax.Array,           # [N, M] int32 (-1 padded)
+    items: jax.Array,         # [N, dp] fp32, dp a lane multiple
+    *,
+    interpret: bool = True,
+):
+    """One fused reverse-link merge step per unique target.  Returns the
+    ``[G, M]`` rewritten row ids (all ``-1`` for pad steps); the wrapper owns
+    the bucketing pre-pass and the row scatter."""
+    g = utgt.shape[0]
+    k = bucket_ids.shape[1]
+    m = adj.shape[1]
+    dp = items.shape[1]
+
+    spec_any = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+
+    return pl.pallas_call(
+        functools.partial(_commit_merge_kernel, m=m),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),   # target id
+            pl.BlockSpec((1, k), lambda i: (i, 0)),   # proposal ids
+            pl.BlockSpec((1, k), lambda i: (i, 0)),   # proposal scores
+            spec_any,                                 # adj (HBM)
+            spec_any,                                 # items (HBM)
+        ],
+        out_specs=pl.BlockSpec((1, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, m), jnp.int32),
+        scratch_shapes=[
+            pltpu.SMEM((1, m), jnp.int32),
+            pltpu.VMEM((1, m), jnp.int32),
+            pltpu.VMEM((1, dp), jnp.float32),
+            pltpu.VMEM((m, dp), jnp.float32),
+            pltpu.SemaphoreType.DMA((m + 3,)),
+        ],
+        interpret=interpret,
+    )(utgt, bucket_ids, bucket_scores, adj, items)

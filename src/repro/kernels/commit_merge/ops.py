@@ -1,0 +1,113 @@
+"""jit'd wrapper for commit_merge: buckets the [E] proposal table to target
+tiles and exposes the commit_merge_ref signature so
+``core.build.commit_batch`` can dispatch to it as a commit backend.
+
+Bucketing pre-pass (the only global work left — ONE stable E-row lex-sort by
+(target, cand), vs the reference's two (E·(M+1))-row device-wide sorts):
+
+  1. sort the proposals by (target, cand); adjacent equal pairs are
+     duplicates — all but the first (= first in input order, the sort is
+     stable) are dropped, which is exactly the reference's pass-1 semantics;
+  2. segment boundaries of the sorted target column enumerate the unique
+     targets; each surviving proposal gets (segment id, position within
+     segment) and is scattered into a fixed-width ``[E, K]`` bucket table —
+     compacted, and in cand-ascending order within a row, which is the tie
+     order the kernel's ranking must reproduce;
+  3. the kernel rewrites one row per unique target (pad steps for the
+     all-unique worst case emit ``-1`` rows into a dummy slot), and a single
+     row-granular scatter puts the rewritten rows back.
+
+``max_cands`` bounds the bucket width K = the number of DISTINCT cand ids a
+single target can receive.  ``commit_batch`` passes its insert-batch size B
+(each batch row proposes itself at most once per target after dedup); the
+default ``min(E, N)`` is always sufficient.  Overflow beyond a too-small
+caller-supplied bound is dropped silently — sizing K is the caller contract.
+
+Padding note: the feature axis is zero-padded to the 128 lane width, which
+keeps fp32 inner products bit-identical (same rule as beam_step), so the
+rescored existing edges rank exactly as the reference's unpadded einsum.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.commit_merge.kernel import commit_merge_pallas
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("max_cands", "interpret"))
+def commit_merge(
+    adj: jax.Array,
+    items: jax.Array,
+    targets: jax.Array,   # [E] int32 reverse-edge targets (-1 invalid)
+    cands: jax.Array,     # [E] int32 candidate neighbors (-1 invalid)
+    scores: jax.Array,    # [E] fp32 s(target, cand)
+    *,
+    max_cands: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Drop-in for commit_merge_ref backed by the fused Pallas kernel.
+    ``interpret=None`` auto-falls back to interpret mode off-TPU."""
+    n, m = adj.shape
+    e = targets.shape[0]
+    if e == 0:
+        return adj
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    k = max_cands if max_cands is not None else min(e, n)
+    k = max(min(k, e), 1)
+
+    d = items.shape[-1]
+    dp = _round_up(d, 128)
+    items_pad = jnp.pad(items.astype(jnp.float32), ((0, 0), (0, dp - d)))
+
+    # --- bucket the proposals: one stable E-row lex-sort by (target, cand) --
+    big = jnp.int32(n + 1)
+    targets = targets.astype(jnp.int32)
+    k1 = jnp.where(targets >= 0, targets, big)
+    k2 = jnp.where((targets >= 0) & (cands >= 0), cands.astype(jnp.int32), big)
+    k1s, k2s, c_s, s_s = jax.lax.sort(
+        (k1, k2, cands.astype(jnp.int32), scores.astype(jnp.float32)),
+        num_keys=2, is_stable=True,
+    )
+    dup = jnp.concatenate(
+        [jnp.zeros((1,), bool), (k1s[1:] == k1s[:-1]) & (k2s[1:] == k2s[:-1])]
+    )
+    v_b = (k1s < big) & (k2s < big) & ~dup          # survives into a bucket
+    new_t = jnp.concatenate(
+        [k1s[:1] < big, (k1s[1:] != k1s[:-1]) & (k1s[1:] < big)]
+    )                                               # first entry of a target
+    seg = jnp.cumsum(new_t.astype(jnp.int32)) - 1   # unique-target index
+    cv = jnp.cumsum(v_b.astype(jnp.int32))
+    base = jax.lax.cummax(jnp.where(new_t, cv - v_b.astype(jnp.int32), 0))
+    pos = cv - 1 - base                             # slot within the bucket
+
+    row = jnp.where(v_b, seg, e)
+    col = jnp.where(v_b, pos, 0)
+    bucket_ids = (
+        jnp.full((e, k), -1, jnp.int32).at[row, col].set(c_s, mode="drop")
+    )
+    bucket_scores = (
+        jnp.zeros((e, k), jnp.float32).at[row, col].set(s_s, mode="drop")
+    )
+    urow = jnp.where(new_t, seg, e)
+    utgt = (
+        jnp.full((e, 1), -1, jnp.int32)
+        .at[urow, 0].set(jnp.where(new_t, k1s, 0), mode="drop")
+    )
+
+    # --- per-tile VMEM merge + one row-granular scatter back ----------------
+    out_rows = commit_merge_pallas(
+        utgt, bucket_ids, bucket_scores, adj.astype(jnp.int32), items_pad,
+        interpret=interpret,
+    )
+    adj_pad = jnp.concatenate([adj, jnp.full((1, m), -1, adj.dtype)], axis=0)
+    wrow = jnp.where(utgt[:, 0] >= 0, utgt[:, 0], n)  # pad rows -> dummy row
+    return adj_pad.at[wrow].set(out_rows.astype(adj.dtype))[:n]

@@ -1,0 +1,99 @@
+"""Pure-jnp oracle for commit_merge — the reverse-link segmented top-M merge
+of the batched Algorithm-2 commit, moved verbatim from
+``core.build._segmented_topM_merge``.
+
+This IS the reference backend of ``core.build.commit_batch``: the commit
+dispatch calls it directly, so the oracle and the production reference path
+cannot drift apart (same contract as ``kernels/beam_step/ref.py``).
+
+Semantics (what any commit backend must reproduce bit-for-bit):
+  * every edge ``(targets[i], cands[i], scores[i])`` proposes ``cands[i]`` as
+    a reverse neighbor of ``targets[i]``; entries with ``targets[i] < 0`` are
+    padding and propose nothing;
+  * every row whose target appears with ``targets[i] >= 0`` — even when all
+    of its proposed cands are ``-1`` — is fully rewritten: its existing edges
+    are *rescored* (inner product against the target's vector) and re-ranked
+    together with the proposals;
+  * duplicate ``(target, cand)`` pairs collapse to the first proposal in
+    input order; a proposal that duplicates an existing edge replaces it
+    (the proposal's score wins);
+  * each rewritten row keeps its top-M by score; ties resolve by ascending
+    cand id (the stable (target, cand) pre-sort order); trailing slots are
+    ``-1``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def commit_merge_ref(
+    adj: jax.Array,
+    items: jax.Array,
+    targets: jax.Array,   # [E] int32 reverse-edge targets (-1 invalid)
+    cands: jax.Array,     # [E] int32 candidate neighbors (the new items)
+    scores: jax.Array,    # [E] fp32 s(target, cand)
+) -> jax.Array:
+    """Merge reverse-edge candidates into the adjacency rows of ``targets``,
+    keeping each row's top-M by similarity.  Fully vectorized."""
+    n, m = adj.shape
+    e = targets.shape[0]
+    big = jnp.int32(n + 1)
+
+    # --- existing edges of touched targets (contributed once per target) ----
+    order = jnp.argsort(jnp.where(targets >= 0, targets, big))
+    t_s = targets[order]
+    c_s = cands[order]
+    s_s = scores[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), t_s[1:] != t_s[:-1]]
+    ) & (t_s >= 0)
+
+    safe_t = jnp.maximum(t_s, 0)
+    ex_ids = adj[safe_t]                                   # [E, M]
+    ex_valid = (ex_ids >= 0) & first[:, None]
+    ex_vecs = items[jnp.maximum(ex_ids, 0)]                # [E, M, d]
+    t_vecs = items[safe_t]                                 # [E, d]
+    ex_scores = jnp.einsum(
+        "ed,emd->em", t_vecs, ex_vecs, preferred_element_type=jnp.float32
+    )
+
+    # --- edge table ---------------------------------------------------------
+    tab_t = jnp.concatenate([t_s, jnp.broadcast_to(t_s[:, None], (e, m)).reshape(-1)])
+    tab_c = jnp.concatenate([c_s, ex_ids.reshape(-1)])
+    tab_s = jnp.concatenate([s_s, ex_scores.reshape(-1)])
+    tab_v = jnp.concatenate([t_s >= 0, ex_valid.reshape(-1)])
+    tab_v &= tab_c >= 0
+
+    # --- pass 1: drop duplicate (target, neighbor) pairs --------------------
+    k1 = jnp.where(tab_v, tab_t, big)
+    k2 = jnp.where(tab_v, tab_c, big)
+    k1, k2, tab_t, tab_c, tab_s, tab_v = jax.lax.sort(
+        (k1, k2, tab_t, tab_c, tab_s, tab_v), num_keys=2, is_stable=True
+    )
+    dup = jnp.concatenate(
+        [jnp.zeros((1,), bool), (k1[1:] == k1[:-1]) & (k2[1:] == k2[:-1])]
+    )
+    tab_v &= ~dup
+
+    # --- pass 2: rank by score within each target segment -------------------
+    k1 = jnp.where(tab_v, tab_t, big)
+    nk = jnp.where(tab_v, -tab_s, jnp.float32(jnp.inf))
+    k1, nk, tab_t, tab_c, tab_v = jax.lax.sort(
+        (k1, nk, tab_t, tab_c, tab_v), num_keys=2, is_stable=True
+    )
+    r = tab_t.shape[0]
+    idx = jnp.arange(r, dtype=jnp.int32)
+    seg_first = jnp.concatenate([jnp.ones((1,), bool), k1[1:] != k1[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(seg_first, idx, 0))
+    rank = idx - seg_start
+    keep = tab_v & (rank < m)
+
+    # --- scatter rows back (touched rows fully rewritten) --------------------
+    adj_pad = jnp.concatenate([adj, jnp.full((1, m), -1, adj.dtype)], axis=0)
+    row = jnp.where(first, safe_t, n)
+    adj_pad = adj_pad.at[row].set(-1)  # clear touched rows (dummy row n absorbs)
+    wr = jnp.where(keep, tab_t, n)
+    wc = jnp.where(keep, rank, 0)
+    adj_pad = adj_pad.at[wr, wc].set(jnp.where(keep, tab_c, -1))
+    return adj_pad[:n]

@@ -3,7 +3,7 @@ stage (--index ipnsw_plus), the ip-NSW baseline, or the exact scan.
 
   PYTHONPATH=src python -m repro.launch.serve --index ipnsw_plus \
       --n-items 20000 --batch 256 --ef 40 [--shards 4] \
-      [--backend pallas] [--build-backend scan]
+      [--backend pallas] [--build-backend scan] [--commit-backend pallas]
 
 With --shards > 1, items are row-sharded into shard-local sub-indexes and
 queries fan out via shard_map (requires that many local devices; use
@@ -40,6 +40,9 @@ def main():
     ap.add_argument("--build-backend", default="host",
                     choices=["host", "scan"],
                     help="insertion driver (build.BUILD_BACKENDS)")
+    ap.add_argument("--commit-backend", default="reference",
+                    choices=["reference", "pallas"],
+                    help="reverse-link merge kernel (build.COMMIT_BACKENDS)")
     args = ap.parse_args()
 
     items = jnp.asarray(mips_dataset(args.n_items, args.dim, args.profile, seed=0))
@@ -58,6 +61,7 @@ def main():
                               plus=args.index == "ipnsw_plus",
                               build_backend=args.build_backend,
                               backend=args.backend,
+                              commit_backend=args.commit_backend,
                               max_degree=16, ef_construction=32,
                               insert_batch=512)
         from repro.launch.mesh import make_mesh_compat
@@ -86,7 +90,8 @@ def main():
         cls = IpNSWPlus if args.index == "ipnsw_plus" else IpNSW
         index = cls(max_degree=16, ef_construction=32, insert_batch=512,
                     backend=args.backend,
-                    build_backend=args.build_backend).build(items)
+                    build_backend=args.build_backend,
+                    commit_backend=args.commit_backend).build(items)
         r = index.search(queries, k=args.k, ef=args.ef)  # compile warmup
         jax.block_until_ready(r.ids)
         t0 = time.perf_counter()

@@ -116,6 +116,70 @@ def test_scan_build_rejects_neighbor_fn():
         build_graph(items, build_backend="nope")
 
 
+# ---------------------------------------------------------------------------
+# commit-backend axis: the fused commit-merge kernel must commit the SAME
+# graph as the sort-based reference on both build drivers (DESIGN.md §7).
+# Sizes are smaller than the host/scan axis above because the pallas commit
+# runs in interpret mode off-TPU.
+# ---------------------------------------------------------------------------
+
+NC = 220 if QUICK else 300
+CB_BATCH = 64
+
+
+@pytest.mark.parametrize("profile", PROFILES)
+@pytest.mark.parametrize("build_backend", ("host", "scan"))
+def test_commit_backend_bit_identical(profile, build_backend):
+    items = jnp.asarray(mips_dataset(NC, D, profile=profile, seed=7))
+    kw = dict(max_degree=8, ef_construction=16, insert_batch=CB_BATCH,
+              build_backend=build_backend)
+    ref = build_graph(items, **kw)
+    pal = build_graph(items, **kw, commit_backend="pallas")
+    _assert_graphs_identical(ref, pal)
+    assert float(ref.entry_norm) == float(pal.entry_norm)
+
+
+def test_commit_backend_bit_identical_plus_scan():
+    """ip-NSW+ scan build: BOTH carried graphs (angular + ip) must match
+    across commit backends — the §4.2 interleaving amplifies any drift."""
+    items = _items("gaussian")[:NC]
+    kw = dict(max_degree=8, ef_construction=16, ang_degree=6, ang_ef=8,
+              insert_batch=CB_BATCH, build_backend="scan")
+    ref = IpNSWPlus(**kw).build(items)
+    pal = IpNSWPlus(**kw, commit_backend="pallas").build(items)
+    _assert_graphs_identical(ref.ip_graph, pal.ip_graph)
+    _assert_graphs_identical(ref.ang_graph, pal.ang_graph)
+
+
+def test_entry_carry_matches_full_argmax():
+    """commit_batch advances the entry with an O(B) carried compare; pin it
+    against the historical full [N] masked argmax on both drivers, plus the
+    carried norm against the entry's actual norm."""
+    for profile in PROFILES:
+        items = _items(profile)
+        for bb in ("host", "scan"):
+            g = build_graph(items, max_degree=8, ef_construction=16,
+                            insert_batch=BATCH, build_backend=bb)
+            norms = np.linalg.norm(np.asarray(g.items), axis=-1)
+            inserted = np.arange(norms.shape[0]) < int(g.size)
+            full = int(np.argmax(np.where(inserted, norms, -np.inf)))
+            assert int(g.entry) == full
+            assert float(g.entry_norm) == norms[int(g.entry)]
+
+
+def test_build_graph_rejects_unknown_backends_eagerly():
+    """Typo'd backends must fail before any build work, not mid-trace."""
+    items = _items("gaussian")
+    with pytest.raises(ValueError, match="backend"):
+        build_graph(items, backend="cuda")
+    with pytest.raises(ValueError, match="commit_backend"):
+        build_graph(items, commit_backend="nope")
+    with pytest.raises(ValueError, match="backend"):
+        IpNSWPlus(backend="cuda").build(items)
+    with pytest.raises(ValueError, match="commit_backend"):
+        IpNSWPlus(commit_backend="nope").build(items)
+
+
 def test_hierarchical_scan_build_searches():
     """HierarchicalIpNSW threads build_backend through every level; the
     level graphs are scan-built and search still returns sane results."""

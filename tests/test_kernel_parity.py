@@ -1,12 +1,14 @@
 """Kernel parity matrix: every kernels/*/ops.py vs its ref.py oracle, in
 interpret mode, across shapes, odd (non-128-multiple) dims, and -1 padded
 ids — including the fused beam_step kernel (bit-exact ids vs the reference
-step and vs the reference full walk)."""
+step and vs the reference full walk) and the fused commit_merge kernel
+(bit-exact adjacency vs the segmented top-M reference merge)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
 from repro.kernels.beam_step import beam_step, beam_step_ref
+from repro.kernels.commit_merge import commit_merge, commit_merge_ref
 from repro.kernels.gather_score import gather_score, gather_score_ref
 from repro.kernels.mips_topk import mips_topk, mips_topk_ref
 from repro.kernels.topk_merge import topk_merge, topk_merge_ref
@@ -76,6 +78,147 @@ def test_flash_attn_parity_cell(rng):
     out = flash_attention_head(q, k, v, bq=64, bk=64)
     ref = flash_attention_head_ref(q, k, v)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# commit_merge: bit-exact adjacency parity vs the segmented top-M reference
+# ---------------------------------------------------------------------------
+
+
+def _assert_commit_parity(adj, items, targets, cands, scores, **kw):
+    args = tuple(map(jnp.asarray, (adj, items, targets, cands, scores)))
+    ref = commit_merge_ref(*args)
+    out = commit_merge(*args, **kw)
+    assert np.array_equal(np.asarray(ref), np.asarray(out))
+
+
+@pytest.mark.parametrize(
+    "n,m,e,d",
+    [
+        (20, 1, 1, 1),       # degenerate everything
+        (50, 4, 33, 8),      # odd E
+        (100, 7, 64, 17),    # odd M, odd d
+        (40, 3, 55, 129),    # odd everything, d > 128
+        (200, 16, 256, 48),  # paper-scale degree
+    ],
+)
+def test_commit_merge_matches_ref_bit_exact(rng, n, m, e, d):
+    items = rng.normal(size=(n, d)).astype(np.float32)
+    adj = rng.integers(-1, n, size=(n, m)).astype(np.int32)
+    targets = rng.integers(-1, n, size=(e,)).astype(np.int32)  # -1 padded
+    cands = rng.integers(-1, n, size=(e,)).astype(np.int32)
+    scores = rng.normal(size=(e,)).astype(np.float32)
+    _assert_commit_parity(adj, items, targets, cands, scores)
+
+
+def test_commit_merge_duplicate_pairs_first_proposal_wins(rng):
+    """Duplicate (target, cand) pairs — even with different scores — must
+    collapse to the first proposal in input order, like the reference's
+    stable pass-1 sort."""
+    n, m, d = 30, 4, 8
+    items = rng.normal(size=(n, d)).astype(np.float32)
+    adj = rng.integers(-1, n, size=(n, m)).astype(np.int32)
+    targets = np.array([3, 3, 3, 3, 9, 9, 9], np.int32)
+    cands = np.array([5, 5, 5, 8, 2, 2, 8], np.int32)
+    scores = np.array([1.0, 9.0, -2.0, 0.5, 4.0, -4.0, 0.25], np.float32)
+    _assert_commit_parity(adj, items, targets, cands, scores)
+
+
+def test_commit_merge_proposal_replaces_existing_edge(rng):
+    """A proposal duplicating an existing edge replaces it (the proposal's
+    score wins), including when that demotes the edge out of the top-M."""
+    n, m, d = 30, 4, 8
+    items = rng.normal(size=(n, d)).astype(np.float32)
+    adj = rng.integers(-1, n, size=(n, m)).astype(np.int32)
+    adj[11] = [5, 9, -1, -1]
+    targets = np.array([11, 11, 11], np.int32)
+    cands = np.array([5, 20, 9], np.int32)
+    scores = np.array([100.0, -100.0, -50.0], np.float32)
+    _assert_commit_parity(adj, items, targets, cands, scores)
+
+
+def test_commit_merge_hub_target(rng):
+    """The paper's hot case: every proposal lands on one large-norm hub —
+    the bucket compaction must hold the whole batch for a single target."""
+    n, m, e, d = 60, 4, 48, 8
+    items = rng.normal(size=(n, d)).astype(np.float32)
+    adj = rng.integers(-1, n, size=(n, m)).astype(np.int32)
+    targets = np.full((e,), 7, np.int32)
+    cands = rng.integers(0, n, size=(e,)).astype(np.int32)
+    scores = rng.normal(size=(e,)).astype(np.float32)
+    _assert_commit_parity(adj, items, targets, cands, scores)
+
+
+def test_commit_merge_all_invalid_tail_batch(rng):
+    """A fully-masked tail batch (targets all -1, the scan driver's pad
+    commit) must leave the adjacency untouched."""
+    n, m, e, d = 40, 3, 24, 8
+    items = rng.normal(size=(n, d)).astype(np.float32)
+    adj = rng.integers(-1, n, size=(n, m)).astype(np.int32)
+    targets = np.full((e,), -1, np.int32)
+    cands = rng.integers(-1, n, size=(e,)).astype(np.int32)
+    scores = rng.normal(size=(e,)).astype(np.float32)
+    _assert_commit_parity(adj, items, targets, cands, scores)
+    out = commit_merge(*map(jnp.asarray, (adj, items, targets, cands, scores)))
+    assert np.array_equal(np.asarray(out), adj)
+
+
+def test_commit_merge_candless_target_reranks_row(rng):
+    """A valid target whose proposals are all -1 still gets its row rescored
+    and re-ranked from its existing edges (reference semantics)."""
+    n, m, d = 40, 4, 8
+    items = rng.normal(size=(n, d)).astype(np.float32)
+    adj = rng.integers(-1, n, size=(n, m)).astype(np.int32)
+    targets = np.array([13, 13, 21, -1], np.int32)
+    cands = np.array([-1, -1, -1, 5], np.int32)
+    scores = np.zeros((4,), np.float32)
+    _assert_commit_parity(adj, items, targets, cands, scores)
+
+
+def test_commit_merge_max_cands_exact_bound(rng):
+    """max_cands equal to the true per-target distinct-cand count (the
+    commit_batch contract: the insert-batch size) stays bit-exact."""
+    n, m, d = 50, 4, 8
+    items = rng.normal(size=(n, d)).astype(np.float32)
+    adj = rng.integers(-1, n, size=(n, m)).astype(np.int32)
+    targets = np.full((10,), 33, np.int32)
+    cands = np.arange(10, dtype=np.int32)
+    scores = rng.normal(size=(10,)).astype(np.float32)
+    _assert_commit_parity(adj, items, targets, cands, scores, max_cands=10)
+
+
+def test_commit_batch_pallas_backend_bit_exact(rng):
+    """The commit_backend dispatch seam: a full commit (forward edges +
+    reverse merge + size/entry advance) is bit-identical across backends."""
+    from repro.core.build import commit_batch
+    from repro.core.graph import empty_graph
+
+    items = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+    norms = jnp.linalg.norm(items, axis=-1)
+    base = empty_graph(items, 4)
+    bids = jnp.arange(32, dtype=jnp.int32)
+    nbr = jnp.asarray(rng.integers(-1, 32, (32, 4)).astype(np.int32))
+    sc = jnp.asarray(rng.normal(size=(32, 4)).astype(np.float32))
+    ref = commit_batch(base, bids, nbr, sc, norms)
+    pal = commit_batch(base, bids, nbr, sc, norms, commit_backend="pallas")
+    assert np.array_equal(np.asarray(ref.adj), np.asarray(pal.adj))
+    assert int(ref.size) == int(pal.size)
+    assert int(ref.entry) == int(pal.entry)
+    assert float(ref.entry_norm) == float(pal.entry_norm)
+
+
+def test_commit_batch_rejects_unknown_backend(rng):
+    from repro.core.build import commit_batch
+    from repro.core.graph import empty_graph
+
+    items = jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))
+    g = empty_graph(items, 2)
+    with pytest.raises(ValueError, match="commit_backend"):
+        commit_batch(
+            g, jnp.arange(2, dtype=jnp.int32),
+            jnp.full((2, 2), -1, jnp.int32), jnp.zeros((2, 2), jnp.float32),
+            jnp.linalg.norm(items, axis=-1), commit_backend="cuda",
+        )
 
 
 # ---------------------------------------------------------------------------
