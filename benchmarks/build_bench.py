@@ -48,7 +48,19 @@ def phase_split_rows(profile: str, quick: bool) -> list:
     """Host-driver build with find/commit timed separately per commit
     backend.  Sizes stay small: the pallas commit is interpret-mode off-TPU.
     ``profile`` is a benchmarks.common.PROFILES name (resolved to its
-    underlying norm-distribution shape at a phase-split-sized N)."""
+    underlying norm-distribution shape at a phase-split-sized N).
+
+    ``pad_step_frac`` (ROADMAP PR-3 follow-on, observability slice): the
+    fused commit kernel's grid is sized for the all-unique worst case
+    ``G = E`` proposals, so every batch whose E proposals collapse onto
+    fewer than E distinct targets runs ``E - U`` pad steps.  The column
+    reports the build-wide fraction of grid steps that were pads — the
+    headroom a multi-target tiling of the commit grid would reclaim.  It is
+    a property of the insertion schedule (identical for both commit
+    backends — only the pallas one actually runs the grid), measured from
+    the committed proposal tables during the timed build.
+    """
+    import numpy as np
     import jax
     import jax.numpy as jnp
     from benchmarks.common import PROFILES
@@ -73,6 +85,7 @@ def phase_split_rows(profile: str, quick: bool) -> list:
                 reverse_links=True, commit_backend=cb,
             )
             find_s = commit_s = 0.0
+            grid_steps = pad_steps = 0
             start = min(batch, n)
             while start < n:
                 stop = min(start + batch, n)
@@ -91,11 +104,17 @@ def phase_split_rows(profile: str, quick: bool) -> list:
                 t2 = time.perf_counter()
                 find_s += t1 - t0
                 commit_s += t2 - t1
+                if measure:
+                    # Commit grid = E proposal slots; real steps = distinct
+                    # valid reverse-link targets in this batch's table.
+                    tgt = np.asarray(nbr).reshape(-1)
+                    grid_steps += tgt.size
+                    pad_steps += tgt.size - len(np.unique(tgt[tgt >= 0]))
                 start = stop
-            return (find_s, commit_s) if measure else None
+            return (find_s, commit_s, grid_steps, pad_steps) if measure else None
 
         one_build(measure=False)  # compile warmup
-        find_s, commit_s = one_build(measure=True)
+        find_s, commit_s, grid_steps, pad_steps = one_build(measure=True)
         total = find_s + commit_s
         rows.append(dict(
             bench="build_phase",
@@ -107,6 +126,9 @@ def phase_split_rows(profile: str, quick: bool) -> list:
             find_s=round(find_s, 3),
             commit_s=round(commit_s, 3),
             commit_share=round(commit_s / total, 3) if total else 0.0,
+            pad_step_frac=(
+                round(pad_steps / grid_steps, 3) if grid_steps else 0.0
+            ),
         ))
     return rows
 

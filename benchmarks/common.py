@@ -3,9 +3,15 @@ profiles + cached index builds (several figures reuse the same indexes).
 
 Sizes: full mode targets the paper's qualitative regime on CPU in minutes;
 REPRO_BENCH_QUICK=1 shrinks everything for CI.
+
+REPRO_BENCH_JSON=<path> mirrors every row ``emit`` prints into a JSON file
+(rewritten after each emit, so a partial run still leaves valid JSON) — CI
+uploads these as workflow artifacts so the perf trajectory is inspectable
+per PR without scraping the log.
 """
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -79,8 +85,11 @@ def ipnsw_plus_index(tag: str, items: np.ndarray, **kw) -> IpNSWPlus:
     return _cache[key]
 
 
+_json_rows: list = []
+
+
 def emit(rows: list, header: bool = False) -> None:
-    """Print benchmark rows as CSV."""
+    """Print benchmark rows as CSV; mirror them to REPRO_BENCH_JSON if set."""
     if not rows:
         return
     keys = list(rows[0])
@@ -88,3 +97,8 @@ def emit(rows: list, header: bool = False) -> None:
         print(",".join(keys))
     for r in rows:
         print(",".join(str(r[k]) for k in keys))
+    path = os.environ.get("REPRO_BENCH_JSON")
+    if path:
+        _json_rows.extend(rows)
+        with open(path, "w") as f:
+            json.dump(_json_rows, f, indent=1, default=str)

@@ -1,6 +1,13 @@
 """Figure 7: recall-vs-time, ip-NSW vs ip-NSW+ (+ Simple-LSH and brute-force
 context).  Wall time here is CPU (relative ordering only; the
-hardware-independent axis is Fig 8a, recall-vs-#evaluations)."""
+hardware-independent axis is Fig 8a, recall-vs-#evaluations).
+
+``--storage int8`` (the default "both" includes it) adds ``ipnsw[int8]`` /
+``ipnsw+[int8]`` rows — the quantized-walk + exact-fp32-rerank path
+(DESIGN.md §8) over the SAME cached f32-built indexes, so the recall delta
+vs the matching f32 row isolates what int8 storage costs (expected: within
+0.01 — the rerank recovers the ordering, see tests/test_storage.py)."""
+import argparse
 import time
 
 import numpy as np
@@ -23,7 +30,7 @@ def _timed(fn, *args, repeats=3, **kw):
     return out, (time.perf_counter() - t0) / repeats
 
 
-def run():
+def run(storage: str = "both"):
     rows = []
     name = "image_like"
     items, queries, gt = dataset(name)
@@ -41,6 +48,18 @@ def run():
         rows.append(dict(bench="fig7", dataset=name, algo="ipnsw+", knob=ef,
                          recall=round(recall_at_k(np.asarray(r.ids), gt), 4),
                          ms_per_query=round(dt / len(queries) * 1e3, 4)))
+
+    # Storage trajectory: the int8 quantized walk + exact fp32 rerank vs the
+    # matching f32 rows above (same indexes, same queries — the recall delta
+    # is pure storage effect).
+    if storage in ("int8", "both"):
+        for algo, idx in (("ipnsw", base), ("ipnsw+", plus)):
+            for ef in EFS:
+                r, dt = _timed(idx.search, q, 10, ef, storage="int8")
+                rows.append(dict(
+                    bench="fig7", dataset=name, algo=f"{algo}[int8]", knob=ef,
+                    recall=round(recall_at_k(np.asarray(r.ids), gt), 4),
+                    ms_per_query=round(dt / len(queries) * 1e3, 4)))
 
     # Walk-backend trajectory: reference vs fused beam_step kernel on a small
     # query slice (the pallas backend runs in interpret mode on CPU, so the
@@ -65,4 +84,10 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--storage", default="both",
+                    choices=["f32", "int8", "both"],
+                    help="storage rows to emit (f32 = classic rows only; "
+                         "int8/both add the quantized-walk trajectory)")
+    args = ap.parse_args()
+    run(storage=args.storage)

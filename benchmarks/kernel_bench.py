@@ -1,16 +1,24 @@
 """Kernel micro-bench: exact-MIPS scan (the retrieval_cand hot path) — jnp
 backend wall time on CPU + analytic TPU roofline for the Pallas kernel —
-plus the Algorithm-1 walk, reference backend vs the fused beam_step kernel.
+plus the Algorithm-1 walk, reference backend vs the fused beam_step kernel,
+each crossed with the storage axis (f32 items vs the int8 quantized store).
 
 The Pallas kernels run in interpret mode on CPU (orders of magnitude slower
 than compiled TPU — interpret wall time is recorded for trajectory only), so
 this bench reports:
   * jnp/reference backend CPU µs/query (real measurement, sanity scaling)
   * pallas backend interpret-mode wall time (correctness-path cost record)
-  * analytic TPU time bounds: N*d*4 bytes / 819 GB/s (item streaming, the
-    design's HBM-bound optimum) + MXU time at 197 TFLOP/s; for the walk,
-    the per-step fused-kernel bound steps*(M*d*4/HBM) per query
+  * analytic TPU time bounds: N*d*itemsize bytes / 819 GB/s (item streaming,
+    the design's HBM-bound optimum) + MXU time at 197 TFLOP/s; for the walk,
+    the per-step fused-kernel bound steps*(M*d*itemsize/HBM) per query
+  * ``hbm_bytes_per_query`` — the analytic per-query HBM item-stream bytes.
+    The f32-vs-int8 row pairs show the ~4x reduction the quantized store
+    buys (int8 streams 1-byte codes + one fp32 scale per row, DESIGN.md §8).
+
+  PYTHONPATH=src:. python benchmarks/kernel_bench.py [--storage f32|int8|both]
 """
+import argparse
+import functools
 import time
 
 import numpy as np
@@ -18,49 +26,78 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import QUICK, emit
-from repro.core import exact_topk
+from repro.core import exact_topk, quantize_items
 from repro.core.build import COMMIT_BACKENDS, build_graph
 from repro.core.search import STEP_BACKENDS, beam_search
+from repro.core.storage import STORAGE_BACKENDS
 
 HBM = 819e9
 PEAK = 197e12
 
 
-def run():
+def _storages(storage: str):
+    return STORAGE_BACKENDS if storage == "both" else (storage,)
+
+
+def run(storage: str = "both"):
     rows = []
     n = 100_000 if QUICK else 1_000_000
     for (b, d) in ((1, 64), (128, 64), (1, 300)):
         items = jnp.asarray(np.random.default_rng(0).normal(size=(n, d)).astype(np.float32))
         q = jnp.asarray(np.random.default_rng(1).normal(size=(b, d)).astype(np.float32))
-        vals, ids = exact_topk(q, items, k=10)  # warm
-        jax.block_until_ready(ids)
-        t0 = time.perf_counter()
-        for _ in range(3):
-            vals, ids = exact_topk(q, items, k=10)
+        for st in _storages(storage):
+            if st == "int8":
+                store = quantize_items(items)
+                # jnp oracle of the quantized scan (the pallas tile path is
+                # covered by the parity tests; einsum is the CPU-fast path).
+                from repro.kernels.mips_topk import mips_topk_ref
+
+                scan = jax.jit(functools.partial(mips_topk_ref, k=10))
+
+                def run_scan():
+                    return scan(q, store.codes, scales=store.scales)
+
+                # 1-byte codes + one fp32 scale per row
+                item_bytes = n * d * 1.0 + n * 4.0
+            else:
+                def run_scan():
+                    return exact_topk(q, items, k=10)
+
+                item_bytes = n * d * 4.0
+            vals, ids = run_scan()  # warm
             jax.block_until_ready(ids)
-        dt = (time.perf_counter() - t0) / 3
-        flops = 2.0 * b * n * d
-        bytes_hbm = n * d * 4.0 + b * d * 4.0
-        t_mem = bytes_hbm / HBM
-        t_mxu = flops / PEAK
-        rows.append(dict(
-            bench="kernel_mips_topk", backend="jnp", B=b, N=n, d=d,
-            cpu_us_per_query=round(dt / b * 1e6, 1),
-            tpu_bound_us=round(max(t_mem, t_mxu) * 1e6, 1),
-            bound="memory" if t_mem > t_mxu else "compute",
-        ))
-    rows += walk_step_bench()
+            t0 = time.perf_counter()
+            for _ in range(3):
+                vals, ids = run_scan()
+                jax.block_until_ready(ids)
+            dt = (time.perf_counter() - t0) / 3
+            flops = 2.0 * b * n * d
+            bytes_hbm = item_bytes + b * d * 4.0
+            t_mem = bytes_hbm / HBM
+            t_mxu = flops / PEAK
+            rows.append(dict(
+                bench="kernel_mips_topk", backend="jnp", storage=st,
+                B=b, N=n, d=d,
+                cpu_us_per_query=round(dt / b * 1e6, 1),
+                tpu_bound_us=round(max(t_mem, t_mxu) * 1e6, 1),
+                bound="memory" if t_mem > t_mxu else "compute",
+                hbm_bytes_per_query=int(bytes_hbm / b),
+            ))
+    rows += walk_step_bench(storage)
     rows += commit_merge_bench()
     emit(rows, header=True)
     return rows
 
 
-def walk_step_bench():
-    """Algorithm-1 walk: reference step_fn vs the fused beam_step kernel.
+def walk_step_bench(storage: str = "both"):
+    """Algorithm-1 walk: reference step_fn vs the fused beam_step kernel,
+    on fp32 items and on the int8 quantized store.
 
     Sizes are small because the pallas backend runs in interpret mode on CPU;
-    the row pair still pins the reference-vs-fused trajectory per release and
-    the analytic bound column gives the compiled-TPU expectation.
+    the row pairs still pin the reference-vs-fused and f32-vs-int8
+    trajectories per release, and the analytic bound/bytes columns give the
+    compiled-TPU expectation (the int8 rows stream M 1-byte rows + M fp32
+    scales per step instead of M fp32 rows — the ~4x HBM cut).
     """
     n, d, b, m = (500, 48, 4, 8) if QUICK else (2000, 64, 8, 8)
     pool, steps = 16, 24
@@ -68,32 +105,41 @@ def walk_step_bench():
     items = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32) / np.sqrt(d))
     q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32) / np.sqrt(d))
     g = build_graph(items, max_degree=m, ef_construction=16, insert_batch=256)
+    store = quantize_items(g.items) if "int8" in _storages(storage) else None
     init = jnp.broadcast_to(g.entry[None, None], (b, 1)).astype(jnp.int32)
     # fused step on TPU: M item rows at the 128-lane padded width the kernel
-    # actually streams, plus the adjacency row fetched twice (SMEM + VMEM)
+    # actually streams (1 byte/elem for int8 codes + 4 B/row of scales),
+    # plus the adjacency row fetched twice (SMEM + VMEM)
     dp = -(-d // 128) * 128
-    t_step = (m * dp * 4.0 + 2 * m * 4.0) / HBM
+    step_bytes = {
+        "f32": m * dp * 4.0 + 2 * m * 4.0,
+        "int8": m * dp * 1.0 + m * 4.0 + 2 * m * 4.0,
+    }
     rows = []
-    for backend in STEP_BACKENDS:
-        def run_walk():
-            return beam_search(
-                g, q, init, pool_size=pool, max_steps=steps, k=10,
-                backend=backend,
-            )
-        r = run_walk()
-        jax.block_until_ready(r.ids)
-        t0 = time.perf_counter()
-        reps = 3 if backend == "reference" else 1
-        for _ in range(reps):
+    for st in _storages(storage):
+        for backend in STEP_BACKENDS:
+            def run_walk():
+                return beam_search(
+                    g, q, init, pool_size=pool, max_steps=steps, k=10,
+                    backend=backend, storage=st,
+                    store=store if st == "int8" else None,
+                )
             r = run_walk()
             jax.block_until_ready(r.ids)
-        dt = (time.perf_counter() - t0) / reps
-        rows.append(dict(
-            bench="walk_step", backend=backend, B=b, N=n, d=d,
-            cpu_us_per_query=round(dt / b * 1e6, 1),
-            tpu_bound_us=round(int(r.steps) * t_step * 1e6, 3),
-            bound="memory",
-        ))
+            t0 = time.perf_counter()
+            reps = 3 if backend == "reference" else 1
+            for _ in range(reps):
+                r = run_walk()
+                jax.block_until_ready(r.ids)
+            dt = (time.perf_counter() - t0) / reps
+            walk_bytes = int(r.steps) * step_bytes[st]
+            rows.append(dict(
+                bench="walk_step", backend=backend, storage=st, B=b, N=n, d=d,
+                cpu_us_per_query=round(dt / b * 1e6, 1),
+                tpu_bound_us=round(walk_bytes / HBM * 1e6, 3),
+                bound="memory",
+                hbm_bytes_per_query=int(walk_bytes),
+            ))
     return rows
 
 
@@ -107,6 +153,9 @@ def commit_merge_bench():
     compiled bound — U touched rows each streaming (M+1) item rows at the
     128-lane padded width, the fused path's only HBM traffic (the reference
     additionally sorts the E*(M+1)-row edge table device-wide twice).
+    The build always runs on fp32 items (DESIGN.md §8), so these rows carry
+    storage="f32" and the per-insert byte column for symmetry with the rest
+    of the table.
     """
     n, d, b, m = (1000, 48, 32, 8) if QUICK else (20_000, 64, 256, 16)
     rng = np.random.default_rng(0)
@@ -120,7 +169,8 @@ def commit_merge_bench():
     scores = jnp.asarray(rng.normal(size=(e,)).astype(np.float32))
     u = int(len(np.unique(np.asarray(targets))))
     dp = -(-d // 128) * 128
-    t_commit = u * (m + 1) * dp * 4.0 / HBM
+    commit_bytes = u * (m + 1) * dp * 4.0
+    t_commit = commit_bytes / HBM
 
     from repro.kernels.commit_merge import commit_merge, commit_merge_ref
 
@@ -139,13 +189,20 @@ def commit_merge_bench():
             jax.block_until_ready(run_commit())
         dt = (time.perf_counter() - t0) / reps
         rows.append(dict(
-            bench="commit_merge", backend=backend, B=b, N=n, d=d,
+            bench="commit_merge", backend=backend, storage="f32",
+            B=b, N=n, d=d,
             cpu_us_per_query=round(dt / b * 1e6, 1),
             tpu_bound_us=round(t_commit * 1e6, 3),
             bound="memory",
+            hbm_bytes_per_query=int(commit_bytes / b),
         ))
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--storage", default="both",
+                    choices=["f32", "int8", "both"],
+                    help="storage backends to bench (both = f32 + int8 rows)")
+    args = ap.parse_args()
+    run(storage=args.storage)

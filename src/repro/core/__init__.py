@@ -11,9 +11,18 @@ from repro.core.metrics import recall_at_k, recall_curve
 from repro.core.norm_filter import NormFilteredIndex
 from repro.core.search import SearchResult, beam_search
 from repro.core.similarity import Similarity, normalize
+from repro.core.storage import (
+    STORAGE_BACKENDS,
+    ItemStore,
+    dequantize,
+    make_store,
+    quantize_items,
+)
 
 __all__ = [
     "BUILD_BACKENDS",
+    "STORAGE_BACKENDS",
+    "ItemStore",
     "GraphIndex",
     "HierarchicalIpNSW",
     "NormFilteredIndex",
@@ -25,10 +34,13 @@ __all__ = [
     "SimpleLSH",
     "beam_search",
     "build_graph",
+    "dequantize",
     "empty_graph",
     "exact_topk",
     "in_degrees",
+    "make_store",
     "normalize",
+    "quantize_items",
     "out_degrees",
     "recall_at_k",
     "recall_curve",

@@ -352,6 +352,13 @@ def build_graph(
     BUILD_BACKENDS and DESIGN.md §6); ``commit_backend`` selects the
     reverse-link merge kernel (COMMIT_BACKENDS, DESIGN.md §7).  All three
     are validated eagerly, before any build work starts.
+
+    There is deliberately NO ``storage=`` knob here: construction always
+    walks and scores fp32 items, because edge-selection error compounds
+    into a permanently worse graph while search-time quantization error is
+    repaired per query by the exact rerank.  The int8 item store is derived
+    once from the frozen items post-build (storage.make_store; the index
+    classes own that step — DESIGN.md §8).
     """
     if build_backend not in BUILD_BACKENDS:
         raise ValueError(

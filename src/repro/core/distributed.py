@@ -29,6 +29,7 @@ from repro.compat import shard_map
 
 from repro.core.graph import GraphIndex
 from repro.core.search import beam_search
+from repro.core.storage import ItemStore, quantize_items, validate_storage
 
 NEG_INF = jnp.float32(-jnp.inf)
 
@@ -44,12 +45,19 @@ class ShardedIndex(NamedTuple):
            real graph vertices locally, so the merge must drop local ids
            >= count — otherwise their 0.0 scores outrank genuine
            negative-score items and surface global ids >= N.
+    store / ang_store: stacked per-shard int8 item stores (codes
+           [P, Nloc, d], scales [P, Nloc]) for ``storage="int8"`` serving,
+           or None (f32 / legacy indexes).  Tail-shard pad rows quantize to
+           all-zero codes, so their quantized scores are exactly the fp32
+           path's 0.0 and the same ``count`` mask drops them at merge.
     """
 
     ip: GraphIndex
     ang: Optional[GraphIndex]
     offset: jax.Array
     count: Optional[jax.Array] = None
+    store: Optional[ItemStore] = None
+    ang_store: Optional[ItemStore] = None
 
 
 def stack_shards(
@@ -74,6 +82,7 @@ def build_sharded(
     *,
     plus: bool = True,
     build_backend: str = "host",
+    storage: str = "f32",
     **index_kwargs,
 ) -> ShardedIndex:
     """Split ``items`` into ``n_shards`` contiguous row shards and build one
@@ -84,10 +93,14 @@ def build_sharded(
     build over the shard axis, so all P shard graphs build inside ONE device
     program.  ``index_kwargs`` are IpNSW / IpNSWPlus constructor fields
     (including ``backend=`` for the insertion walks and ``commit_backend=``
-    for the reverse-link merge kernel)."""
+    for the reverse-link merge kernel).  ``storage="int8"`` derives stacked
+    per-shard quantized stores post-build (builds stay fp32, DESIGN.md §8);
+    pass the matching ``storage=`` to ``sharded_search`` to serve from them.
+    """
     from repro.core.ipnsw import IpNSW
     from repro.core.ipnsw_plus import IpNSWPlus
 
+    validate_storage(storage)
     n = items.shape[0]
     per = -(-n // n_shards)
     counts = [max(min(per, n - s * per), 0) for s in range(n_shards)]
@@ -103,7 +116,8 @@ def build_sharded(
         locals_.append(local)
 
     if build_backend == "scan":
-        return _build_sharded_scan(locals_, counts, plus=plus, **index_kwargs)
+        index = _build_sharded_scan(locals_, counts, plus=plus, **index_kwargs)
+        return _attach_stores(index, storage)
 
     ip_graphs, ang_graphs = [], []
     for local in locals_:
@@ -114,7 +128,22 @@ def build_sharded(
         else:
             idx = IpNSW(**index_kwargs).build(local)
             ip_graphs.append(idx.graph)
-    return stack_shards(ip_graphs, ang_graphs if plus else None, counts)
+    index = stack_shards(ip_graphs, ang_graphs if plus else None, counts)
+    return _attach_stores(index, storage)
+
+
+def _attach_stores(index: ShardedIndex, storage: str) -> ShardedIndex:
+    """Derive stacked per-shard quantized stores from the frozen shard items
+    (quantize_items maps over the leading shard axis unchanged — scales
+    reduce over the feature axis only)."""
+    if storage != "int8":
+        return index
+    return index._replace(
+        store=quantize_items(index.ip.items),
+        ang_store=(
+            quantize_items(index.ang.items) if index.ang is not None else None
+        ),
+    )
 
 
 def _build_sharded_scan(
@@ -197,13 +226,15 @@ def _local_ipnsw(
     ef: int,
     max_steps: int,
     backend: str = "reference",
+    storage: str = "f32",
 ):
     g = graphs.ip
     b = queries.shape[0]
     init = jnp.broadcast_to(g.entry[None, None], (b, 1)).astype(jnp.int32)
     res = beam_search(
         g, queries, init, pool_size=max(ef, k), max_steps=max_steps, k=k,
-        backend=backend,
+        backend=backend, storage=storage,
+        store=graphs.store if storage == "int8" else None,
     )
     return res.ids, res.scores, res.evals
 
@@ -218,6 +249,7 @@ def _local_ipnsw_plus(
     ang_ef: int = 10,
     k_angular: int = 10,
     backend: str = "reference",
+    storage: str = "f32",
 ):
     from repro.core.ipnsw_plus import _seed_from_angular
 
@@ -232,11 +264,14 @@ def _local_ipnsw_plus(
         max_steps=2 * max(ang_ef, k_angular),
         k=k_angular,
         backend=backend,
+        storage=storage,
+        store=graphs.ang_store if storage == "int8" else None,
     )
     seeds = _seed_from_angular(graphs.ip.adj, a.ids)
     r = beam_search(
         graphs.ip, queries, seeds, pool_size=max(ef, k), max_steps=max_steps, k=k,
-        backend=backend,
+        backend=backend, storage=storage,
+        store=graphs.store if storage == "int8" else None,
     )
     return r.ids, r.scores, a.evals + r.evals
 
@@ -271,12 +306,15 @@ def _merge_topk(all_ids, all_scores, k: int, shard_mask=None):
     return jnp.where(vals > NEG_INF, out_ids, -1), vals
 
 
-def _make_local_fn(plus: bool, ang_ef: int, k_angular: int) -> Callable:
+def _make_local_fn(
+    plus: bool, ang_ef: int, k_angular: int, storage: str = "f32"
+) -> Callable:
     if plus:
         return functools.partial(
-            _local_ipnsw_plus, ang_ef=ang_ef, k_angular=k_angular
+            _local_ipnsw_plus, ang_ef=ang_ef, k_angular=k_angular,
+            storage=storage,
         )
-    return _local_ipnsw
+    return functools.partial(_local_ipnsw, storage=storage)
 
 
 def sharded_search(
@@ -293,6 +331,7 @@ def sharded_search(
     backend: str = "reference",
     ang_ef: int = 10,
     k_angular: int = 10,
+    storage: str = "f32",
 ):
     """shard_map driver: local walk on every shard + all-gather top-k merge.
 
@@ -302,9 +341,19 @@ def sharded_search(
     search.STEP_BACKENDS); ``ang_ef``/``k_angular`` parameterize the angular
     stage of the ip-NSW+ local walks (pass the values the index was built
     with — they are search-time knobs, not baked into the index).
+    ``storage="int8"`` walks each shard's quantized store (built via
+    ``build_sharded(storage="int8")``) with the per-shard exact fp32 rerank
+    before the merge — the merged scores stay exact inner products, and the
+    ``count`` mask drops tail-shard pad nodes exactly as on the f32 path.
+    An f32-built index searched with int8 gets its stores derived here at
+    the driver level, once per call — build with ``storage="int8"`` to skip
+    that re-derivation entirely.
     """
+    validate_storage(storage)
+    if storage == "int8" and index.store is None:
+        index = _attach_stores(index, storage)
     steps = max_steps if max_steps is not None else 2 * ef
-    local_fn = _make_local_fn(plus, ang_ef, k_angular)
+    local_fn = _make_local_fn(plus, ang_ef, k_angular, storage)
     mask = shard_mask if shard_mask is not None else jnp.ones(
         (index.offset.shape[0],), bool
     )
@@ -344,12 +393,16 @@ def sharded_search_reference(
     backend: str = "reference",
     ang_ef: int = 10,
     k_angular: int = 10,
+    storage: str = "f32",
 ):
     """Single-device oracle: identical math to ``sharded_search`` with the
     shard dimension mapped by vmap instead of shard_map.  Used by tests to
     pin down the distributed semantics on CPU."""
+    validate_storage(storage)
+    if storage == "int8" and index.store is None:
+        index = _attach_stores(index, storage)
     steps = max_steps if max_steps is not None else 2 * ef
-    local_fn = _make_local_fn(plus, ang_ef, k_angular)
+    local_fn = _make_local_fn(plus, ang_ef, k_angular, storage)
 
     def one(blk: ShardedIndex):
         ids, scores, evals = local_fn(

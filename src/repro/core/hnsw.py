@@ -30,6 +30,7 @@ from repro.core.build import build_graph
 from repro.core.graph import GraphIndex
 from repro.core.search import SearchResult, beam_search
 from repro.core.similarity import Similarity
+from repro.core.storage import ItemStore, make_store, validate_storage
 
 
 def assign_levels(n: int, max_degree: int, seed: int = 0, max_levels: int = 6):
@@ -39,16 +40,23 @@ def assign_levels(n: int, max_degree: int, seed: int = 0, max_levels: int = 6):
     return np.minimum(lv, max_levels - 1)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "ef", "max_steps", "backend"))
-def _level0_search(graph, queries, init, *, k, ef, max_steps, backend="reference"):
+@functools.partial(
+    jax.jit, static_argnames=("k", "ef", "max_steps", "backend", "storage")
+)
+def _level0_search(graph, queries, init, store=None, *, k, ef, max_steps,
+                   backend="reference", storage="f32"):
     return beam_search(graph, queries, init, pool_size=max(ef, k),
-                       max_steps=max_steps, k=k, backend=backend)
+                       max_steps=max_steps, k=k, backend=backend,
+                       storage=storage, store=store)
 
 
-@functools.partial(jax.jit, static_argnames=("max_steps", "backend"))
-def _greedy_descend(graph, queries, init, *, max_steps, backend="reference"):
+@functools.partial(
+    jax.jit, static_argnames=("max_steps", "backend", "storage")
+)
+def _greedy_descend(graph, queries, init, store=None, *, max_steps,
+                    backend="reference", storage="f32"):
     r = beam_search(graph, queries, init, pool_size=1, max_steps=max_steps, k=1,
-                    backend=backend)
+                    backend=backend, storage=storage, store=store)
     return r.ids[:, 0], r.evals
 
 
@@ -64,11 +72,14 @@ class HierarchicalIpNSW:
     backend: str = "reference"       # walk step backend (search.STEP_BACKENDS)
     build_backend: str = "host"      # insertion driver (build.BUILD_BACKENDS)
     commit_backend: str = "reference"  # reverse-link merge (COMMIT_BACKENDS)
+    storage: str = "f32"             # item store search streams (DESIGN.md §8)
     levels: List[GraphIndex] = field(default_factory=list)
     ids: List[np.ndarray] = field(default_factory=list)       # level -> global ids
     inv: List[np.ndarray] = field(default_factory=list)       # global -> local (-1)
+    stores: List[Optional[ItemStore]] = field(default_factory=list)
 
     def build(self, items: jax.Array, progress: bool = False):
+        validate_storage(self.storage)
         items = jnp.asarray(items)
         n = items.shape[0]
         lv = assign_levels(n, self.max_degree, self.seed)
@@ -97,13 +108,27 @@ class HierarchicalIpNSW:
             self.levels.append(g)
             self.ids.append(sel)
             self.inv.append(inv)
+        # One store per level (levels are distinct item subsets); the upper
+        # levels are tiny (N/M^k rows), so the extra stores cost ~nothing.
+        self.stores = [make_store(g.items, self.storage) for g in self.levels]
         return self
+
+    def _resolve_stores(self, storage: str) -> List[Optional[ItemStore]]:
+        validate_storage(storage)
+        if storage == "f32":
+            return [None] * len(self.levels)
+        if not self.stores or self.stores[0] is None:
+            self.stores = [make_store(g.items, storage) for g in self.levels]
+        return self.stores
 
     def search(self, queries: jax.Array, k: int = 10, ef: int = 64,
                max_steps: Optional[int] = None,
-               backend: Optional[str] = None) -> SearchResult:
+               backend: Optional[str] = None,
+               storage: Optional[str] = None) -> SearchResult:
         assert self.levels, "call build() first"
         backend = backend if backend is not None else self.backend
+        storage = storage if storage is not None else self.storage
+        stores = self._resolve_stores(storage)
         b = queries.shape[0]
         extra_evals = jnp.zeros((b,), jnp.int32)
 
@@ -118,7 +143,9 @@ class HierarchicalIpNSW:
                 local = jnp.where(local >= 0, local, g.entry)
                 init = local[:, None].astype(jnp.int32)
             best_local, ev = _greedy_descend(
-                g, queries, init, max_steps=4 * self.max_degree, backend=backend
+                g, queries, init, stores[level],
+                max_steps=4 * self.max_degree, backend=backend,
+                storage=storage,
             )
             cur_global = jnp.asarray(self.ids[level])[jnp.maximum(best_local, 0)]
             extra_evals = extra_evals + ev
@@ -129,8 +156,8 @@ class HierarchicalIpNSW:
         else:
             init0 = cur_global[:, None].astype(jnp.int32)  # level0 local == global
         steps = max_steps if max_steps is not None else 2 * ef
-        res = _level0_search(g0, queries, init0, k=k, ef=ef, max_steps=steps,
-                             backend=backend)
+        res = _level0_search(g0, queries, init0, stores[0], k=k, ef=ef,
+                             max_steps=steps, backend=backend, storage=storage)
         return SearchResult(
             ids=res.ids,
             scores=res.scores,

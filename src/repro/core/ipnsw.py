@@ -16,25 +16,29 @@ from repro.core.build import build_graph
 from repro.core.graph import GraphIndex
 from repro.core.search import SearchResult, beam_search
 from repro.core.similarity import Similarity
+from repro.core.storage import ItemStore, make_store, validate_storage
 
 
 @functools.partial(
-    jax.jit, static_argnames=("pool_size", "max_steps", "k", "backend")
+    jax.jit,
+    static_argnames=("pool_size", "max_steps", "k", "backend", "storage"),
 )
 def _search(
     graph: GraphIndex,
     queries,
+    store: Optional[ItemStore] = None,
     *,
     pool_size: int,
     max_steps: int,
     k: int,
     backend: str = "reference",
+    storage: str = "f32",
 ):
     b = queries.shape[0]
     init = jnp.broadcast_to(graph.entry[None, None], (b, 1)).astype(jnp.int32)
     return beam_search(
         graph, queries, init, pool_size=pool_size, max_steps=max_steps, k=k,
-        backend=backend,
+        backend=backend, storage=storage, store=store,
     )
 
 
@@ -47,7 +51,10 @@ class IpNSW:
     walk step implementation ("reference" | "pallas", see search.py);
     ``build_backend`` selects the insertion driver ("host" | "scan", see
     build.BUILD_BACKENDS); ``commit_backend`` selects the reverse-link merge
-    kernel ("reference" | "pallas", see build.COMMIT_BACKENDS).
+    kernel ("reference" | "pallas", see build.COMMIT_BACKENDS); ``storage``
+    selects the item representation search streams ("f32" | "int8", see
+    storage.STORAGE_BACKENDS and DESIGN.md §8 — the build always runs on
+    fp32 items and the quantized store is derived once post-build).
     """
 
     max_degree: int = 16
@@ -57,9 +64,12 @@ class IpNSW:
     backend: str = "reference"
     build_backend: str = "host"
     commit_backend: str = "reference"
+    storage: str = "f32"
     graph: Optional[GraphIndex] = None
+    store: Optional[ItemStore] = None
 
     def build(self, items: jax.Array, progress: bool = False) -> "IpNSW":
+        validate_storage(self.storage)
         self.graph = build_graph(
             items,
             similarity=Similarity.INNER_PRODUCT,
@@ -72,7 +82,19 @@ class IpNSW:
             commit_backend=self.commit_backend,
             progress=progress,
         )
+        # Derived once from the frozen fp32 items; None for the f32 path.
+        self.store = make_store(self.graph.items, self.storage)
         return self
+
+    def _resolve_store(self, storage: str) -> Optional[ItemStore]:
+        """Per-call storage override: reuse the cached store, or derive and
+        cache one when an f32-built index is first searched with int8."""
+        validate_storage(storage)
+        if storage == "f32":
+            return None
+        if self.store is None:
+            self.store = make_store(self.graph.items, storage)
+        return self.store
 
     def search(
         self,
@@ -81,10 +103,14 @@ class IpNSW:
         ef: int = 64,
         max_steps: Optional[int] = None,
         backend: Optional[str] = None,
+        storage: Optional[str] = None,
     ) -> SearchResult:
         assert self.graph is not None, "call build() first"
         steps = max_steps if max_steps is not None else 2 * ef
+        st = storage if storage is not None else self.storage
         return _search(
-            self.graph, queries, pool_size=max(ef, k), max_steps=steps, k=k,
+            self.graph, queries, self._resolve_store(st),
+            pool_size=max(ef, k), max_steps=steps, k=k,
             backend=backend if backend is not None else self.backend,
+            storage=st,
         )

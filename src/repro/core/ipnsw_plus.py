@@ -41,6 +41,7 @@ from repro.core.build import (
 from repro.core.graph import GraphIndex, empty_graph
 from repro.core.search import SearchResult, beam_search
 from repro.core.similarity import normalize
+from repro.core.storage import ItemStore, make_store, validate_storage
 
 NEG_INF = jnp.float32(-jnp.inf)
 
@@ -68,13 +69,16 @@ def _seed_from_angular(ip_adj: jax.Array, ang_ids: jax.Array) -> jax.Array:
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "k", "ef", "ang_ef", "k_angular", "max_steps", "ang_max_steps", "backend"
+        "k", "ef", "ang_ef", "k_angular", "max_steps", "ang_max_steps",
+        "backend", "storage",
     ),
 )
 def _search_plus(
     ang_graph: GraphIndex,
     ip_graph: GraphIndex,
     queries: jax.Array,
+    ang_store: Optional[ItemStore] = None,
+    ip_store: Optional[ItemStore] = None,
     *,
     k: int,
     ef: int,
@@ -83,11 +87,17 @@ def _search_plus(
     max_steps: int,
     ang_max_steps: int,
     backend: str = "reference",
+    storage: str = "f32",
 ) -> PlusResult:
     b = queries.shape[0]
     init_a = jnp.broadcast_to(ang_graph.entry[None, None], (b, 1)).astype(jnp.int32)
     # Angular ranking for a fixed query is monotone in q . x_hat, so the raw
     # query works against the normalized angular items (similarity.py).
+    # With storage="int8" BOTH walks stream quantized stores (each graph has
+    # its own — the angular one is over the normalized copy); each walk ends
+    # with its own exact fp32 rerank, which for the angular stage merely
+    # re-orders the seed neighborhood and for the ip stage is the final
+    # asymmetric refine (DESIGN.md §8).
     ang = beam_search(
         ang_graph,
         queries,
@@ -96,6 +106,8 @@ def _search_plus(
         max_steps=ang_max_steps,
         k=k_angular,
         backend=backend,
+        storage=storage,
+        store=ang_store,
     )
     seeds = _seed_from_angular(ip_graph.adj, ang.ids)
     ip = beam_search(
@@ -106,6 +118,8 @@ def _search_plus(
         max_steps=max_steps,
         k=k,
         backend=backend,
+        storage=storage,
+        store=ip_store,
     )
     return PlusResult(
         ids=ip.ids,
@@ -137,8 +151,11 @@ class IpNSWPlus:
     backend: str = "reference"    # walk step backend (search.STEP_BACKENDS)
     build_backend: str = "host"   # insertion driver (build.BUILD_BACKENDS)
     commit_backend: str = "reference"  # reverse-link merge (COMMIT_BACKENDS)
+    storage: str = "f32"          # item store search streams (DESIGN.md §8)
     ang_graph: Optional[GraphIndex] = field(default=None)
     ip_graph: Optional[GraphIndex] = field(default=None)
+    ang_store: Optional[ItemStore] = field(default=None)
+    ip_store: Optional[ItemStore] = field(default=None)
 
     # ------------------------------------------------------------------ build
 
@@ -159,6 +176,7 @@ class IpNSWPlus:
                 f"commit_backend must be one of {COMMIT_BACKENDS}, "
                 f"got {self.commit_backend!r}"
             )
+        validate_storage(self.storage)
         items = jnp.asarray(items)
         n = items.shape[0]
         ang_items = normalize(items)
@@ -184,6 +202,7 @@ class IpNSWPlus:
              i_adj, i_size, i_entry, i_enorm) = arrays
             self.ang_graph = GraphIndex(a_adj, ang_items, a_size, a_entry, a_enorm)
             self.ip_graph = GraphIndex(i_adj, items, i_size, i_entry, i_enorm)
+            self._make_stores(self.storage)
             return self
 
         ang = empty_graph(ang_items, self.ang_degree)
@@ -249,7 +268,14 @@ class IpNSWPlus:
             start = stop
 
         self.ang_graph, self.ip_graph = ang, ip
+        self._make_stores(self.storage)
         return self
+
+    def _make_stores(self, storage: str) -> None:
+        """Derive (and cache) both graphs' quantized stores post-build —
+        one per graph, since the angular graph holds the normalized copy."""
+        self.ang_store = make_store(self.ang_graph.items, storage)
+        self.ip_store = make_store(self.ip_graph.items, storage)
 
     # ----------------------------------------------------------------- search
 
@@ -262,15 +288,24 @@ class IpNSWPlus:
         k_angular: Optional[int] = None,
         max_steps: Optional[int] = None,
         backend: Optional[str] = None,
+        storage: Optional[str] = None,
     ) -> PlusResult:
         assert self.ip_graph is not None, "call build() first"
         ang_ef = ang_ef if ang_ef is not None else self.ang_ef
         k_ang = k_angular if k_angular is not None else self.k_angular
         steps = max_steps if max_steps is not None else 2 * ef
+        st = storage if storage is not None else self.storage
+        validate_storage(st)
+        if st == "int8" and self.ip_store is None:
+            self._make_stores(st)  # f32-built index searched with int8
+        ang_store = self.ang_store if st == "int8" else None
+        ip_store = self.ip_store if st == "int8" else None
         return _search_plus(
             self.ang_graph,
             self.ip_graph,
             queries,
+            ang_store,
+            ip_store,
             k=k,
             ef=ef,
             ang_ef=ang_ef,
@@ -278,6 +313,7 @@ class IpNSWPlus:
             max_steps=steps,
             ang_max_steps=2 * max(ang_ef, k_ang),
             backend=backend if backend is not None else self.backend,
+            storage=st,
         )
 
 

@@ -6,9 +6,11 @@ ground-truth occupancy of that slice while cutting index memory, build time
 and walk length proportionally.
 
 This composes with any inner index (ip-NSW or ip-NSW+).  The measured
-recall-vs-keep_frac trade-off is benchmarks/beyond_norm_filter.py; on
-heavy-tailed norm profiles keep_frac=0.25 retains ~99% of achievable recall
-at ~4x less index.
+recall-vs-keep_frac trade-off lives in benchmarks/beyond_paper.py (the
+``beyond_norm_filter`` rows); on heavy-tailed norm profiles keep_frac=0.25
+retains ~99% of achievable recall at ~4x less index.  Composing with
+``storage="int8"`` stacks the two reductions: keep_frac x 4 less item
+memory than the full-catalog fp32 index.
 
 Serving note: the filter also shrinks the fault domain — the sharded index
 (core/distributed.py) over the filtered subset has 1/keep_frac fewer shards
@@ -34,6 +36,7 @@ class NormFilteredIndex:
     max_degree: int = 16
     ef_construction: int = 64
     insert_batch: int = 256
+    storage: str = "f32"   # forwarded to the inner index (DESIGN.md §8)
     inner: object = field(default=None)
     global_ids: Optional[np.ndarray] = None
 
@@ -54,6 +57,7 @@ class NormFilteredIndex:
             max_degree=self.max_degree,
             ef_construction=self.ef_construction,
             insert_batch=self.insert_batch,
+            storage=self.storage,
         ).build(sub, progress=progress)
         return self
 

@@ -26,6 +26,14 @@ Step backends (``backend=``, see DESIGN.md):
                 auto-falls back to interpret mode (bit-identical ids, CPU
                 speed), so the same code path is testable everywhere.
 Both backends share seeding/termination and return identical result ids.
+
+Storage backends (``storage=``, see DESIGN.md §8): with ``storage="int8"``
+the walk scores against the quantized item store — symmetric per-row int8
+codes + fp32 scales, 4x less HBM streamed per step — and the final candidate
+pool is re-scored EXACTLY in fp32 before the top-k is returned (asymmetric
+rerank: approximate walk, exact refine).  Both step backends implement the
+same quantized-score convention, so reference and pallas int8 walks also
+return identical ids.
 """
 from __future__ import annotations
 
@@ -36,6 +44,12 @@ import jax.numpy as jnp
 
 from repro.core.graph import GraphIndex
 from repro.core.similarity import gather_scores
+from repro.core.storage import (
+    STORAGE_BACKENDS,
+    ItemStore,
+    quantize_items,
+    store_scores,
+)
 
 NEG_INF = jnp.float32(-jnp.inf)
 
@@ -79,6 +93,7 @@ def make_step_fn(
     *,
     score_fn=gather_scores,
     interpret: Optional[bool] = None,
+    store: Optional[ItemStore] = None,
 ):
     """Resolve ``backend`` to a step function over the per-query walk state:
 
@@ -88,17 +103,21 @@ def make_step_fn(
     This is the extension point every walk kernel slots into — later fused
     kernels (distance pruning, batched build) register the same shape.
     ``interpret=None`` auto-falls back to Pallas interpret mode off-TPU.
+    With ``store`` given (the int8 storage backend), steps score against the
+    quantized codes instead of ``items`` — via ``quant_score_ref`` on the
+    reference path and the kernel's int8 row-gather path on pallas.
     """
     # Deferred import: kernels.beam_step.ref reuses core.similarity, so a
     # module-level import here would be circular through core/__init__.
     from repro.kernels.beam_step import beam_step, beam_step_ref
 
     if backend == "reference":
+        step_score_fn = score_fn if store is None else _store_score_fn(store)
 
         def step_fn(pool_ids, pool_scores, pool_checked, visited, done):
             return beam_step_ref(
                 pool_ids, pool_scores, pool_checked, visited, done,
-                queries, adj, items, score_fn=score_fn,
+                queries, adj, items, score_fn=step_score_fn,
             )
 
         return step_fn
@@ -121,17 +140,32 @@ def make_step_fn(
         d = items.shape[1]
         dp = _round_up(d, 128)
         q_pad = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, dp - d)))
-        x_pad = jnp.pad(items.astype(jnp.float32), ((0, 0), (0, dp - d)))
+        if store is None:
+            x_pad = jnp.pad(items.astype(jnp.float32), ((0, 0), (0, dp - d)))
+            scales = None
+        else:
+            x_pad = jnp.pad(store.codes.astype(jnp.int8), ((0, 0), (0, dp - d)))
+            scales = store.scales
 
         def step_fn(pool_ids, pool_scores, pool_checked, visited, done):
             return beam_step(
                 pool_ids, pool_scores, pool_checked, visited, done,
-                q_pad, adj, x_pad, interpret=interpret,
+                q_pad, adj, x_pad, scales, interpret=interpret,
             )
 
         return step_fn
 
     raise ValueError(f"backend must be one of {STEP_BACKENDS}, got {backend!r}")
+
+
+def _store_score_fn(store: ItemStore):
+    """``storage.store_scores`` as a ``score_fn`` — closes over the store
+    and ignores the fp32 items the walk passes positionally."""
+
+    def qscore(queries, _items, ids):
+        return store_scores(queries, store, ids)
+
+    return qscore
 
 
 def beam_search(
@@ -145,6 +179,8 @@ def beam_search(
     score_fn=gather_scores,
     backend: str = "reference",
     interpret: Optional[bool] = None,
+    storage: str = "f32",
+    store: Optional[ItemStore] = None,
 ) -> SearchResult:
     """Run the batched walk.
 
@@ -154,6 +190,12 @@ def beam_search(
               plain ip-NSW this is the entry vertex; for ip-NSW+ it is the
               ip-graph neighborhood of the angular search results (Alg 3).
     backend:  "reference" | "pallas" — which step_fn runs the loop body.
+    storage:  "f32" | "int8" — which item representation the walk streams
+              (STORAGE_BACKENDS, DESIGN.md §8).  "int8" walks on quantized
+              scores from ``store`` (derived from ``graph.items`` here when
+              not supplied — index classes pass their cached store) and
+              re-scores the final pool exactly in fp32 before the top-k cut,
+              so returned scores are always exact inner products.
     """
     # Validate eagerly, before seeding does any work: a typo'd backend must
     # not survive until make_step_fn resolves it mid-trace (by which point a
@@ -162,7 +204,25 @@ def beam_search(
         raise ValueError(
             f"backend must be one of {STEP_BACKENDS}, got {backend!r}"
         )
+    if storage not in STORAGE_BACKENDS:
+        raise ValueError(
+            f"storage must be one of {STORAGE_BACKENDS}, got {storage!r}"
+        )
     adj, items = graph.adj, graph.items
+    if storage == "int8":
+        if score_fn is not gather_scores:
+            raise ValueError(
+                "storage='int8' scores with the quantized store's inner "
+                "product and cannot honor a custom score_fn; use "
+                "storage='f32' for custom similarities"
+            )
+        if store is None:
+            store = quantize_items(items)
+    else:
+        store = None
+    # Seeds are scored with the SAME scorer the walk steps use, so the pool
+    # ordering stays consistent across the whole walk.
+    walk_score_fn = score_fn if store is None else _store_score_fn(store)
     B, S = init_ids.shape
     M = adj.shape[1]
     L = pool_size
@@ -170,7 +230,9 @@ def beam_search(
 
     init_ids = _dedup_ids(init_ids)
     valid0 = init_ids >= 0
-    scores0 = jnp.where(valid0, score_fn(queries, items, init_ids), NEG_INF)
+    scores0 = jnp.where(
+        valid0, walk_score_fn(queries, items, init_ids), NEG_INF
+    )
     evals0 = valid0.sum(axis=-1).astype(jnp.int32)
 
     # Seed pool = top-L of the seeds (sorted desc; empty slots are checked).
@@ -198,7 +260,8 @@ def beam_search(
     )
 
     step_fn = make_step_fn(
-        backend, queries, adj, items, score_fn=score_fn, interpret=interpret
+        backend, queries, adj, items, score_fn=score_fn, interpret=interpret,
+        store=store,
     )
 
     def cond(st: _State):
@@ -221,6 +284,29 @@ def beam_search(
         )
 
     final = jax.lax.while_loop(cond, body, state)
+
+    if store is not None:
+        # Exact fp32 rerank of the final ef-pool (asymmetric refine,
+        # DESIGN.md §8): the quantized walk chose WHICH ~L candidates
+        # survive; the fp32 pass decides their order and the top-k cut, so
+        # int8's score error only costs recall when a true top-k item never
+        # entered the pool at all.  L gathered fp32 rows per query — noise
+        # next to the walk's streaming.  Walk ``evals`` stay the quantized
+        # counts (the paper's Fig-5/8a metric counts pool insertions, and
+        # the rerank re-scores rows the walk already evaluated).
+        pool_ids = final.pool_ids
+        exact = jnp.where(
+            pool_ids >= 0, score_fn(queries, items, pool_ids), NEG_INF
+        )
+        vals, sel = jax.lax.top_k(exact, k)
+        ids = jnp.take_along_axis(pool_ids, sel, axis=-1)
+        return SearchResult(
+            ids=jnp.where(vals > NEG_INF, ids, -1),
+            scores=vals,
+            evals=final.evals,
+            steps=final.step,
+            visited=final.visited,
+        )
 
     return SearchResult(
         ids=final.pool_ids[:, :k],

@@ -1,0 +1,109 @@
+"""Quantized item store — the ``storage=`` backend axis (DESIGN.md §8).
+
+The walk and the exact-MIPS scan are HBM-bound at ``N*d*4`` bytes of fp32
+item streaming (kernel_bench's roofline).  Storing the catalog as symmetric
+per-row int8 codes + one fp32 scale per row cuts that traffic ~4x and lets
+~4x larger catalogs fit per device.
+
+Per-row scales (not one global scale) because of the paper's norm bias: the
+large-norm hubs that dominate walk computation span a heavy norm tail
+(Figure 2), and a single global scale would crush the small-norm mass into a
+handful of code levels — the same observation that motivates norm partitioning
+in Norm-Ranging LSH (Yan et al. 2018).  The quantizer is exact about signs
+and monotone per row, and the residual score error is repaired by an
+asymmetric exact fp32 rerank of the final candidate pool (quantized walk,
+fp32 top-k refine — the lightweight-index design of ProMIPS, Song et al.
+2021); ``core.search.beam_search`` owns that rerank.
+
+Contract (see DESIGN.md §8):
+  * ``scale_i = max(|x_i|) / 127`` (clamped away from 0), ``codes_i =
+    round(x_i / scale_i)`` in [-127, 127] — symmetric, zero maps to zero.
+  * quantized score convention everywhere (ref oracle, fused kernels):
+    ``s~(q, i) = (q . codes_i) * scale_i`` — the dot runs in fp32 over the
+    cast codes, then ONE multiply per score.  Every backend implements this
+    exact op order so reference and Pallas walks stay bit-identical.
+  * the graph is built on fp32 items and the store is derived once from the
+    frozen items post-build (quantizing before construction would bake code
+    error into edge selection); search-time storage is a per-call knob.
+
+``STORAGE_BACKENDS`` is the third orthogonal backend axis next to
+``backend=`` (walk step), ``build_backend=`` (insertion driver) and
+``commit_backend=`` (reverse-link merge).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+STORAGE_BACKENDS = ("f32", "int8")
+
+_EPS = 1e-12
+
+
+class ItemStore(NamedTuple):
+    """Symmetric per-row int8 codes + fp32 dequantization scales.
+
+    codes:  [..., N, d] int8 in [-127, 127].
+    scales: [..., N] fp32; ``items ~= codes * scales[..., None]``.
+
+    A pytree of arrays only, so it vmaps over a leading shard axis
+    (core/distributed.py) and passes through jit boundaries; the ``storage``
+    knob itself travels separately as a static string, like the other
+    backend knobs.
+    """
+
+    codes: jax.Array
+    scales: jax.Array
+
+
+def validate_storage(storage: str) -> None:
+    """Eager knob validation — same style as the backend/build_backend/
+    commit_backend checks: a typo'd storage must fail before any build or
+    trace work starts."""
+    if storage not in STORAGE_BACKENDS:
+        raise ValueError(
+            f"storage must be one of {STORAGE_BACKENDS}, got {storage!r}"
+        )
+
+
+def quantize_items(items: jax.Array) -> ItemStore:
+    """[..., N, d] fp32 -> symmetric per-row int8 store.
+
+    All-zero rows (e.g. the tail-shard zero padding in distributed.py) get
+    the clamped minimum scale and all-zero codes, so their quantized scores
+    stay exactly 0.0 — identical to their fp32 scores."""
+    items = jnp.asarray(items, jnp.float32)
+    amax = jnp.max(jnp.abs(items), axis=-1)
+    scales = jnp.maximum(amax, _EPS) / 127.0
+    codes = jnp.clip(
+        jnp.round(items / scales[..., None]), -127.0, 127.0
+    ).astype(jnp.int8)
+    return ItemStore(codes=codes, scales=scales.astype(jnp.float32))
+
+
+def dequantize(store: ItemStore) -> jax.Array:
+    """Reconstruct fp32 items; per-element error is bounded by scale/2."""
+    return store.codes.astype(jnp.float32) * store.scales[..., None]
+
+
+def make_store(items: jax.Array, storage: str) -> Optional[ItemStore]:
+    """Resolve the storage knob: ``None`` for the fp32 fast path (no copy,
+    the GraphIndex items ARE the store), a quantized store for "int8"."""
+    validate_storage(storage)
+    if storage == "f32":
+        return None
+    return quantize_items(items)
+
+
+def store_scores(
+    queries: jax.Array, store: ItemStore, ids: jax.Array
+) -> jax.Array:
+    """Gathered quantized scores ``(q . codes[id]) * scales[id]`` with -1 ids
+    masked to -inf — the reference scorer the quantized walk plugs into
+    ``beam_step_ref``.  Delegates to the quant_score oracle so the scoring
+    convention has exactly one definition."""
+    from repro.kernels.quant_score import quant_score_ref
+
+    return quant_score_ref(queries, store.codes, store.scales, ids)

@@ -9,4 +9,7 @@ on CPU; TPU is the compile target).
   commit_merge — fused reverse-link top-M merge of the Algorithm-2 batched
                  commit (bucket + gather + rescore + dedup + rank per target
                  tile in VMEM); the "pallas" commit backend (DESIGN §7)
+  quant_score  — fused int8 row-gather + dequant + dot (1-byte DMA, fp32
+                 rescale in VMEM); the gathered scorer of the "int8"
+                 storage backend (DESIGN §8)
 """

@@ -28,6 +28,12 @@ could later tile many queries per step.
 
 Ids must be valid graph state (pool ids >= -1, adjacency -1 padded); the
 caller contract matches beam_step_ref bit-for-bit on result ids.
+
+int8 storage (DESIGN.md §8): with ``scales`` given, ``items`` holds the
+quantized store's codes — the row gather DMAs 1-byte elements (4x less HBM
+per step), the cast to fp32 and the per-row rescale happen in VMEM, and the
+dot accumulates fp32.  Ids remain bit-identical to the reference walking the
+same store.
 """
 from __future__ import annotations
 
@@ -44,12 +50,21 @@ from repro.kernels.topk_merge.kernel import NEG_INF, masked_top_l
 def _beam_step_kernel(
     pi_ref, ps_ref, pc_ref, dn_ref, vis_ref, q_ref,   # VMEM-blocked inputs
     adj_hbm, items_hbm,                               # whole arrays, ANY/HBM
-    oi_ref, os_ref, oc_ref, onb_ref, odn_ref, onv_ref,
-    adj_smem, adj_vmem, rows_ref, sems,
-    *,
+    *rest,
     l: int,
     m: int,
+    quantized: bool = False,
 ):
+    # The int8 storage backend (DESIGN.md §8) adds one HBM input (the [N, 1]
+    # per-row dequant scales) and one VMEM scratch (the gathered scales);
+    # ``items_hbm`` then holds the 1-byte codes and ``rows_ref`` is int8.
+    if quantized:
+        (scl_hbm, oi_ref, os_ref, oc_ref, onb_ref, odn_ref, onv_ref,
+         adj_smem, adj_vmem, rows_ref, scl_ref, sems) = rest
+    else:
+        scl_hbm = scl_ref = None
+        (oi_ref, os_ref, oc_ref, onb_ref, odn_ref, onv_ref,
+         adj_smem, adj_vmem, rows_ref, sems) = rest
     pool_ids = pi_ref[...]                 # [1, L] int32
     pool_scores = ps_ref[...]              # [1, L] fp32
     pool_checked = pc_ref[...] != 0        # [1, L] bool
@@ -83,6 +98,9 @@ def _beam_step_kernel(
         adj_v.wait()
 
         # --- 3. gather the M neighbor rows (start all, then wait all) -------
+        # Quantized rows are 1-byte — the DMA streams d bytes per neighbor
+        # instead of 4d; the matching [1, 1] scale element rides along from
+        # the scales column so the rescale never leaves VMEM.
         def _row_copy(j):
             nid = jnp.maximum(adj_smem[0, j], 0)
             return pltpu.make_async_copy(
@@ -90,19 +108,36 @@ def _beam_step_kernel(
                 sems.at[j],
             )
 
+        def _scl_copy(j):
+            nid = jnp.maximum(adj_smem[0, j], 0)
+            return pltpu.make_async_copy(
+                scl_hbm.at[pl.ds(nid, 1), :], scl_ref.at[:, pl.ds(j, 1)],
+                sems.at[m + 2 + j],
+            )
+
         jax.lax.fori_loop(0, m, lambda j, c: (_row_copy(j).start(), c)[1], 0)
+        if quantized:
+            jax.lax.fori_loop(0, m, lambda j, c: (_scl_copy(j).start(), c)[1], 0)
         jax.lax.fori_loop(0, m, lambda j, c: (_row_copy(j).wait(), c)[1], 0)
+        if quantized:
+            jax.lax.fori_loop(0, m, lambda j, c: (_scl_copy(j).wait(), c)[1], 0)
 
     # --- 4. dedup-mask, score, merge — all in VMEM --------------------------
     nbrs = adj_vmem[...]                   # [1, M] int32
     seen = (nbrs[:, :, None] == vis_ref[...][:, None, :]).any(axis=-1)
     valid = (nbrs >= 0) & upd & ~seen
 
+    rows = rows_ref[...]
+    if quantized:
+        rows = rows.astype(jnp.float32)    # cast codes in VMEM, never in HBM
     scores = jax.lax.dot_general(
-        q_ref[...], rows_ref[...],
+        q_ref[...], rows,
         (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )                                      # [1, M]
+    if quantized:
+        # One multiply per score — the ref.py/quant_score op-order contract.
+        scores = scores * scl_ref[...]
     nbr_scores = jnp.where(valid, scores, NEG_INF)
     nbr_ids = jnp.where(valid, nbrs, -1)
 
@@ -129,35 +164,58 @@ def beam_step_pallas(
     visited: jax.Array,       # [B, V] int32 (-1 padded)
     queries: jax.Array,       # [B, dp] fp32, dp a lane multiple
     adj: jax.Array,           # [N, M] int32 (-1 padded)
-    items: jax.Array,         # [N, dp] fp32
+    items: jax.Array,         # [N, dp] fp32 items — or int8 codes (quantized)
+    scales: "jax.Array | None" = None,  # [N, 1] fp32 dequant scales (int8)
     *,
     interpret: bool = True,
 ):
     """One fused Algorithm-1 iteration for every query.  Returns
     (pool_ids, pool_scores, pool_checked, nbr_ids, done, n_scored) with the
-    pool sorted desc and ids bit-identical to beam_step_ref."""
+    pool sorted desc and ids bit-identical to beam_step_ref.
+
+    With ``scales`` given, ``items`` holds the int8 store's codes: neighbor
+    rows DMA as 1-byte elements and scores are ``(q . codes) * scale``
+    (DESIGN.md §8) — bit-identical to ``beam_step_ref`` walking the same
+    store through ``quant_score_ref``."""
     b, l = pool_ids.shape
     v = visited.shape[1]
     dp = queries.shape[1]
     m = adj.shape[1]
+    quantized = scales is not None
 
     spec_l = pl.BlockSpec((1, l), lambda i: (i, 0))
     spec_1 = pl.BlockSpec((1, 1), lambda i: (i, 0))
     spec_any = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
 
+    in_specs = [
+        spec_l,                                   # pool_ids
+        spec_l,                                   # pool_scores
+        spec_l,                                   # pool_checked
+        spec_1,                                   # done
+        pl.BlockSpec((1, v), lambda i: (i, 0)),   # visited
+        pl.BlockSpec((1, dp), lambda i: (i, 0)),  # query
+        spec_any,                                 # adj (HBM)
+        spec_any,                                 # items / codes (HBM)
+    ]
+    operands = [pool_ids, pool_scores, pool_checked, done, visited, queries,
+                adj, items]
+    scratch = [
+        pltpu.SMEM((1, m), jnp.int32),
+        pltpu.VMEM((1, m), jnp.int32),
+        pltpu.VMEM((m, dp), items.dtype),         # int8 rows when quantized
+    ]
+    if quantized:
+        in_specs.append(spec_any)                 # scales column (HBM)
+        operands.append(scales)
+        scratch.append(pltpu.VMEM((1, m), jnp.float32))   # gathered scales
+        scratch.append(pltpu.SemaphoreType.DMA((2 * m + 2,)))
+    else:
+        scratch.append(pltpu.SemaphoreType.DMA((m + 2,)))
+
     return pl.pallas_call(
-        functools.partial(_beam_step_kernel, l=l, m=m),
+        functools.partial(_beam_step_kernel, l=l, m=m, quantized=quantized),
         grid=(b,),
-        in_specs=[
-            spec_l,                                   # pool_ids
-            spec_l,                                   # pool_scores
-            spec_l,                                   # pool_checked
-            spec_1,                                   # done
-            pl.BlockSpec((1, v), lambda i: (i, 0)),   # visited
-            pl.BlockSpec((1, dp), lambda i: (i, 0)),  # query
-            spec_any,                                 # adj (HBM)
-            spec_any,                                 # items (HBM)
-        ],
+        in_specs=in_specs,
         out_specs=(
             spec_l, spec_l, spec_l,
             pl.BlockSpec((1, m), lambda i: (i, 0)),
@@ -171,11 +229,6 @@ def beam_step_pallas(
             jax.ShapeDtypeStruct((b, 1), jnp.int32),
             jax.ShapeDtypeStruct((b, 1), jnp.int32),
         ),
-        scratch_shapes=[
-            pltpu.SMEM((1, m), jnp.int32),
-            pltpu.VMEM((1, m), jnp.int32),
-            pltpu.VMEM((m, dp), jnp.float32),
-            pltpu.SemaphoreType.DMA((m + 2,)),
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(pool_ids, pool_scores, pool_checked, done, visited, queries, adj, items)
+    )(*operands)

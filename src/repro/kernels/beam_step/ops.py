@@ -31,15 +31,26 @@ def beam_step(
     done: jax.Array,          # [B] bool
     queries: jax.Array,       # [B, d]
     adj: jax.Array,           # [N, M] int32
-    items: jax.Array,         # [N, d]
+    items: jax.Array,         # [N, d] fp32 items — or int8 codes (quantized)
+    scales: "jax.Array | None" = None,  # [N] fp32 per-row scales (int8 store)
     *,
     interpret: bool = True,
 ) -> StepResult:
-    """Drop-in for beam_step_ref backed by the fused Pallas kernel."""
+    """Drop-in for beam_step_ref backed by the fused Pallas kernel.
+
+    With ``scales`` given, ``items`` is the int8 store's code matrix and the
+    step scores are the quantized convention ``(q . codes) * scale``
+    (DESIGN.md §8).  Zero-padding the int8 code axis keeps the fp32 dot of
+    the cast codes bit-identical, same as the fp32 rule above."""
     d = queries.shape[-1]
     dp = _round_up(d, 128)
     q = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, dp - d)))
-    x = jnp.pad(items.astype(jnp.float32), ((0, 0), (0, dp - d)))
+    if scales is None:
+        x = jnp.pad(items.astype(jnp.float32), ((0, 0), (0, dp - d)))
+        scl = None
+    else:
+        x = jnp.pad(items.astype(jnp.int8), ((0, 0), (0, dp - d)))
+        scl = scales.reshape(-1, 1).astype(jnp.float32)
     oi, os, oc, onb, odn, onv = beam_step_pallas(
         pool_ids.astype(jnp.int32),
         pool_scores.astype(jnp.float32),
@@ -49,6 +60,7 @@ def beam_step(
         q,
         adj.astype(jnp.int32),
         x,
+        scl,
         interpret=interpret,
     )
     return StepResult(

@@ -46,8 +46,16 @@ def _select_topk(cand_s, cand_i, k: int):
 
 
 def _mips_topk_kernel(
-    q_ref, x_ref, out_s_ref, out_i_ref, acc_s, acc_i, *, k: int, bn: int, n_items: int
+    q_ref, x_ref, *rest, k: int, bn: int, n_items: int, quantized: bool = False
 ):
+    # int8 storage (DESIGN.md §8): the item tile arrives as 1-byte codes plus
+    # a [1, bn] scale row; the cast and the per-row rescale stay in VMEM and
+    # the streamed HBM bytes drop ~4x.
+    if quantized:
+        scl_ref, out_s_ref, out_i_ref, acc_s, acc_i = rest
+    else:
+        scl_ref = None
+        out_s_ref, out_i_ref, acc_s, acc_i = rest
     j = pl.program_id(1)
     nj = pl.num_programs(1)
 
@@ -58,9 +66,13 @@ def _mips_topk_kernel(
 
     q = q_ref[...]  # [bq, d]
     x = x_ref[...]  # [bn, d]
+    if quantized:
+        x = x.astype(jnp.float32)
     scores = jax.lax.dot_general(
         q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )  # [bq, bn]
+    if quantized:
+        scores = scores * scl_ref[...]  # [1, bn] broadcast over queries
     cols = j * bn + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
     scores = jnp.where(cols < n_items, scores, NEG_INF)  # mask ragged tail
 
@@ -79,6 +91,7 @@ def _mips_topk_kernel(
 def mips_topk_pallas(
     queries: jax.Array,
     items: jax.Array,
+    scales: "jax.Array | None" = None,
     *,
     k: int,
     bq: int = 128,
@@ -87,13 +100,28 @@ def mips_topk_pallas(
 ):
     """queries [B, d], items [N, d] (both pre-padded: B%bq==0, N%bn==0,
     d%128==0) -> (scores [B, k], ids [B, k]).  ``n_items`` masking of padded
-    item rows is applied inside the kernel via the true N passed by ops.py."""
+    item rows is applied inside the kernel via the true N passed by ops.py.
+
+    With ``scales`` ([1, N] fp32, pre-padded like the item rows), ``items``
+    holds int8 codes and scores follow the quantized convention
+    ``(q . codes) * scale`` (DESIGN.md §8)."""
     b, d = queries.shape
     n = items.shape[0]
     assert b % bq == 0 and n % bn == 0, (b, bq, n, bn)
+    quantized = scales is not None
 
     grid = (b // bq, n // bn)
-    kernel = functools.partial(_mips_topk_kernel, k=k, bn=bn, n_items=n)
+    kernel = functools.partial(
+        _mips_topk_kernel, k=k, bn=bn, n_items=n, quantized=quantized
+    )
+    in_specs = [
+        pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+        pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+    ]
+    operands = [queries, items]
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j: (0, j)))
+        operands.append(scales)
     out_shape = (
         jax.ShapeDtypeStruct((b, k), jnp.float32),
         jax.ShapeDtypeStruct((b, k), jnp.int32),
@@ -101,10 +129,7 @@ def mips_topk_pallas(
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
             pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
@@ -115,4 +140,4 @@ def mips_topk_pallas(
         ],
         out_shape=out_shape,
         interpret=interpret,
-    )(queries, items)
+    )(*operands)

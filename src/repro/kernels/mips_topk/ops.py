@@ -22,13 +22,18 @@ def _round_up(x: int, m: int) -> int:
 def mips_topk(
     queries: jax.Array,
     items: jax.Array,
+    scales: "jax.Array | None" = None,
     *,
     k: int = 10,
     bq: int = 128,
     bn: int = 512,
     interpret: bool = True,
 ):
-    """Exact top-k MIPS.  queries [B, d], items [N, d] (any shapes)."""
+    """Exact top-k MIPS.  queries [B, d], items [N, d] (any shapes).
+
+    With ``scales`` ([N] fp32), ``items`` holds the int8 store's codes and
+    the scan scores are the quantized convention ``(q . codes) * scale``
+    (DESIGN.md §8) — the tile streams 1-byte rows instead of fp32."""
     b, d = queries.shape
     n = items.shape[0]
     bq = min(bq, _round_up(b, 8))
@@ -36,17 +41,28 @@ def mips_topk(
 
     bp, np_, dp = _round_up(b, bq), _round_up(n, bn), _round_up(d, 128)
     q = jnp.pad(queries.astype(jnp.float32), ((0, bp - b), (0, dp - d)))
-    x = jnp.pad(items.astype(jnp.float32), ((0, np_ - n), (0, dp - d)))
-
+    if scales is None:
+        x = jnp.pad(items.astype(jnp.float32), ((0, np_ - n), (0, dp - d)))
+        scl = None
+    else:
+        x = jnp.pad(items.astype(jnp.int8), ((0, np_ - n), (0, dp - d)))
+        scl = jnp.pad(scales.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
     grid = (bp // bq, np_ // bn)
-    kernel = functools.partial(_mips_topk_kernel, k=k, bn=bn, n_items=n)
+    kernel = functools.partial(
+        _mips_topk_kernel, k=k, bn=bn, n_items=n, quantized=scl is not None
+    )
+    in_specs = [
+        pl.BlockSpec((bq, dp), lambda i, j: (i, 0)),
+        pl.BlockSpec((bn, dp), lambda i, j: (j, 0)),
+    ]
+    operands = [q, x]
+    if scl is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j: (0, j)))
+        operands.append(scl)
     scores, ids = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bq, dp), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, dp), lambda i, j: (j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
             pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
@@ -60,5 +76,5 @@ def mips_topk(
             jax.ShapeDtypeStruct((bp, k), jnp.int32),
         ),
         interpret=interpret,
-    )(q, x)
+    )(*operands)
     return scores[:b], ids[:b]

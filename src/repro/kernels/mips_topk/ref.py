@@ -1,13 +1,29 @@
-"""Pure-jnp oracle for the mips_topk kernel."""
+"""Pure-jnp oracle for the mips_topk kernel.
+
+With ``scales`` given, ``items`` holds int8 codes and the oracle follows the
+quantized-score convention ``(q . codes) * scale`` (DESIGN.md §8) — the same
+op order the kernel's tile path uses.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 
-def mips_topk_ref(queries: jax.Array, items: jax.Array, *, k: int):
+def mips_topk_ref(
+    queries: jax.Array,
+    items: jax.Array,
+    *,
+    k: int,
+    scales: "jax.Array | None" = None,
+):
     scores = jnp.einsum(
-        "bd,nd->bn", queries, items, preferred_element_type=jnp.float32
+        "bd,nd->bn",
+        queries.astype(jnp.float32),
+        items.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
     )
+    if scales is not None:
+        scores = scores * scales[None, :]
     vals, ids = jax.lax.top_k(scores, k)
     return vals, ids.astype(jnp.int32)

@@ -1,0 +1,4 @@
+from repro.kernels.quant_score.ops import quant_score
+from repro.kernels.quant_score.ref import quant_score_ref
+
+__all__ = ["quant_score", "quant_score_ref"]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the quant_score kernel — the quantized-score
+convention's single source of truth (DESIGN.md §8):
+
+    s~(q, i) = (q . codes_i) * scales_i        (fp32 dot over cast codes,
+                                                then ONE multiply per score)
+
+-1 ids are masked to -inf *inside* the oracle (unlike gather_score, whose
+caller owns masking): the quantized walk and the exact-rerank pool both
+carry -1 padding, so the mask is part of the scoring contract here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def quant_score_ref(
+    queries: jax.Array,   # [B, d] fp32
+    codes: jax.Array,     # [N, d] int8
+    scales: jax.Array,    # [N] fp32
+    ids: jax.Array,       # [B, W] int32, -1 padded
+) -> jax.Array:
+    """Per-query gathered dequant-scores, [B, W] fp32; -1 ids -> -inf."""
+    safe = jnp.maximum(ids, 0)
+    rows = codes[safe].astype(jnp.float32)  # [B, W, d]
+    s = jnp.einsum(
+        "bd,bwd->bw",
+        queries.astype(jnp.float32),
+        rows,
+        preferred_element_type=jnp.float32,
+    )
+    s = s * scales[safe]
+    return jnp.where(ids >= 0, s, NEG_INF)

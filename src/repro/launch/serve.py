@@ -3,7 +3,8 @@ stage (--index ipnsw_plus), the ip-NSW baseline, or the exact scan.
 
   PYTHONPATH=src python -m repro.launch.serve --index ipnsw_plus \
       --n-items 20000 --batch 256 --ef 40 [--shards 4] \
-      [--backend pallas] [--build-backend scan] [--commit-backend pallas]
+      [--backend pallas] [--build-backend scan] [--commit-backend pallas] \
+      [--storage int8]
 
 With --shards > 1, items are row-sharded into shard-local sub-indexes and
 queries fan out via shard_map (requires that many local devices; use
@@ -43,6 +44,11 @@ def main():
     ap.add_argument("--commit-backend", default="reference",
                     choices=["reference", "pallas"],
                     help="reverse-link merge kernel (build.COMMIT_BACKENDS)")
+    ap.add_argument("--storage", default="f32",
+                    choices=["f32", "int8"],
+                    help="item store the walks stream "
+                         "(storage.STORAGE_BACKENDS; int8 = quantized walk "
+                         "+ exact fp32 rerank, DESIGN.md §8)")
     args = ap.parse_args()
 
     items = jnp.asarray(mips_dataset(args.n_items, args.dim, args.profile, seed=0))
@@ -62,6 +68,7 @@ def main():
                               build_backend=args.build_backend,
                               backend=args.backend,
                               commit_backend=args.commit_backend,
+                              storage=args.storage,
                               max_degree=16, ef_construction=32,
                               insert_batch=512)
         from repro.launch.mesh import make_mesh_compat
@@ -72,7 +79,8 @@ def main():
         # anything and the timed call would still pay trace+compile.
         search = jax.jit(functools.partial(
             sharded_search, mesh=mesh, k=args.k, ef=args.ef,
-            backend=args.backend, plus=args.index == "ipnsw_plus"))
+            backend=args.backend, storage=args.storage,
+            plus=args.index == "ipnsw_plus"))
         jax.block_until_ready(search(index, queries)[0])  # compile warmup
         t0 = time.perf_counter()
         ids, _, evals = search(index, queries)
@@ -91,7 +99,8 @@ def main():
         index = cls(max_degree=16, ef_construction=32, insert_batch=512,
                     backend=args.backend,
                     build_backend=args.build_backend,
-                    commit_backend=args.commit_backend).build(items)
+                    commit_backend=args.commit_backend,
+                    storage=args.storage).build(items)
         r = index.search(queries, k=args.k, ef=args.ef)  # compile warmup
         jax.block_until_ready(r.ids)
         t0 = time.perf_counter()
@@ -102,6 +111,7 @@ def main():
         ev = float(np.mean(np.asarray(r.evals)))
 
     print(f"[serve] index={args.index} shards={args.shards} "
+          f"storage={args.storage} "
           f"N={args.n_items} B={args.batch} ef={args.ef}: "
           f"recall@{args.k}={rec:.3f} evals/q={ev:.0f} "
           f"({dt/args.batch*1e3:.2f} ms/query batch-amortized)")

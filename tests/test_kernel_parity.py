@@ -11,7 +11,9 @@ from repro.kernels.beam_step import beam_step, beam_step_ref
 from repro.kernels.commit_merge import commit_merge, commit_merge_ref
 from repro.kernels.gather_score import gather_score, gather_score_ref
 from repro.kernels.mips_topk import mips_topk, mips_topk_ref
+from repro.kernels.quant_score import quant_score, quant_score_ref
 from repro.kernels.topk_merge import topk_merge, topk_merge_ref
+from repro.core.storage import quantize_items
 
 
 # ---------------------------------------------------------------------------
@@ -61,6 +63,78 @@ def test_topk_merge_odd_shapes_and_padded_ids(rng, b, l, m):
     np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref[0]))
     assert np.array_equal(np.asarray(out[1]), np.asarray(ref[1]))
     assert np.array_equal(np.asarray(out[2]), np.asarray(ref[2]))
+
+
+# ---------------------------------------------------------------------------
+# quant_score: the int8 storage backend's gathered scorer (DESIGN.md §8) —
+# odd d, -1 padded ids, all-invalid rows, extreme per-row norms
+# ---------------------------------------------------------------------------
+
+
+def _quant_case(rng, b, n, d, w, norm_spread: float = 1.0):
+    """Items whose per-row norms span ``norm_spread`` orders of magnitude
+    either way (the lognormal hub tail per-row scales exist for)."""
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    x *= np.geomspace(
+        10.0 ** -norm_spread, 10.0 ** norm_spread, n
+    ).astype(np.float32)[:, None]
+    store = quantize_items(jnp.asarray(x))
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    ids = rng.integers(0, n, size=(b, w)).astype(np.int32)
+    ids[rng.random(size=ids.shape) < 0.3] = -1  # -1 padding slots
+    if b > 1:
+        ids[-1] = -1  # one all-invalid row
+    return q, store, jnp.asarray(ids)
+
+
+@pytest.mark.parametrize(
+    "b,n,d,w",
+    [(1, 40, 1, 1), (3, 100, 17, 5), (8, 333, 129, 9), (16, 512, 127, 16)],
+)
+def test_quant_score_odd_dims_and_padded_ids(rng, b, n, d, w):
+    q, store, ids = _quant_case(rng, b, n, d, w)
+    out = quant_score(q, store.codes, store.scales, ids)
+    ref = quant_score_ref(q, store.codes, store.scales, ids)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5
+    )
+    # contract: -1 ids are exactly -inf on both paths
+    mask = np.asarray(ids) < 0
+    assert np.all(np.asarray(out)[mask] == -np.inf)
+    assert np.all(np.asarray(ref)[mask] == -np.inf)
+    assert np.all(np.isfinite(np.asarray(out)[~mask]))
+
+
+@pytest.mark.parametrize("norm_spread", [4.0, 6.0])
+def test_quant_score_extreme_per_row_norms(rng, norm_spread):
+    """Per-row scales must keep huge-norm hubs and tiny-norm tail items both
+    finite and relatively accurate — the reason the quantizer is per-row."""
+    b, n, d, w = 4, 200, 33, 8
+    q, store, ids = _quant_case(rng, b, n, d, w, norm_spread=norm_spread)
+    out = quant_score(q, store.codes, store.scales, ids)
+    ref = quant_score_ref(q, store.codes, store.scales, ids)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_quant_score_all_invalid(rng):
+    q, store, _ = _quant_case(rng, 3, 50, 8, 4)
+    ids = jnp.full((3, 4), -1, jnp.int32)
+    out = np.asarray(quant_score(q, store.codes, store.scales, ids))
+    assert np.all(out == -np.inf)
+
+
+@pytest.mark.parametrize("b,n,d,k", [(2, 130, 31, 3), (5, 999, 65, 7)])
+def test_mips_topk_quantized_odd_dims(rng, b, n, d, k):
+    """The int8 tile path of the exact scan vs its jnp oracle."""
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    store = quantize_items(jnp.asarray(x))
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    vs, ids = mips_topk(q, store.codes, store.scales, k=k)
+    rvs, rids = mips_topk_ref(q, store.codes, k=k, scales=store.scales)
+    np.testing.assert_allclose(np.asarray(vs), np.asarray(rvs), rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(ids), np.asarray(rids))
 
 
 # ---------------------------------------------------------------------------

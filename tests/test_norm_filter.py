@@ -1,0 +1,115 @@
+"""NormFilteredIndex: the beyond-paper norm-filter wrapper (see
+benchmarks/beyond_paper.py for the measured keep_frac trade-off).
+
+Pinned here: the local->global id mapping back to the full catalog, the
+16-item keep_frac floor, composition with both inner index classes
+(plus=True/False) and with the int8 storage backend.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import IpNSW, IpNSWPlus, NormFilteredIndex, exact_topk, recall_at_k
+from repro.data import mips_dataset, mips_queries
+
+N, D, K = 1000, 16, 10
+
+
+def _items():
+    return jnp.asarray(mips_dataset(N, D, profile="lognormal", seed=3))
+
+
+def _queries():
+    return jnp.asarray(mips_queries(16, D, seed=9))
+
+
+@pytest.mark.parametrize("plus", [True, False])
+def test_global_id_mapping_and_inner_class(plus):
+    items = _items()
+    nf = NormFilteredIndex(
+        keep_frac=0.5, plus=plus, max_degree=8, ef_construction=24,
+        insert_batch=128,
+    ).build(items)
+    assert isinstance(nf.inner, IpNSWPlus if plus else IpNSW)
+    kept = set(int(i) for i in nf.global_ids)
+    assert len(kept) == N // 2
+
+    res = nf.search(_queries(), k=K, ef=32)
+    ids = np.asarray(res.ids)
+    # every returned id is a global id of the kept slice (or -1 padding)
+    assert set(ids[ids >= 0].ravel()) <= kept
+    assert ids.max() < N
+
+    # the mapping is FULL-catalog correct: the returned scores must equal
+    # the inner products of the mapped global rows
+    scores = np.asarray(res.scores)
+    full = np.asarray(items)
+    qs = np.asarray(_queries())
+    b, j = 0, int(np.argmax(ids[0] >= 0))
+    np.testing.assert_allclose(
+        scores[b, j], qs[b] @ full[ids[b, j]], rtol=1e-5
+    )
+
+
+def test_keeps_largest_norm_items():
+    """The filter keeps exactly the top-keep_frac rows by norm, so a query
+    aligned with the largest-norm item must get it back as top-1 under its
+    GLOBAL id."""
+    rng = np.random.default_rng(0)
+    items = rng.normal(size=(400, D)).astype(np.float32)
+    hub = 137
+    items[hub] *= 50.0  # overwhelming norm -> top-1 for almost any query
+    nf = NormFilteredIndex(
+        keep_frac=0.25, plus=False, max_degree=8, ef_construction=24,
+        insert_batch=128,
+    ).build(jnp.asarray(items))
+    assert hub in set(int(i) for i in nf.global_ids)
+    q = jnp.asarray(items[hub][None, :] / 50.0)
+    res = nf.search(q, k=1, ef=32)
+    assert int(np.asarray(res.ids)[0, 0]) == hub
+
+
+def test_keep_frac_floor_of_16():
+    items = _items()[:64]
+    nf = NormFilteredIndex(
+        keep_frac=0.01, plus=False, max_degree=4, ef_construction=16,
+        insert_batch=64,
+    ).build(items)
+    assert len(nf.global_ids) == 16  # floor, not 64 * 0.01
+    res = nf.search(_queries(), k=4, ef=16)
+    ids = np.asarray(res.ids)
+    assert set(ids[ids >= 0].ravel()) <= set(int(i) for i in nf.global_ids)
+
+
+def test_recall_vs_achievable_on_kept_slice():
+    """The filtered index should nearly achieve the recall ceiling imposed by
+    its kept slice (the Figure-1 occupancy argument): compare against ground
+    truth restricted to kept items, not the full catalog."""
+    items = _items()
+    nf = NormFilteredIndex(
+        keep_frac=0.5, plus=True, max_degree=12, ef_construction=32,
+        insert_batch=128,
+    ).build(items)
+    kept = np.asarray(nf.global_ids)
+    sub = jnp.asarray(np.asarray(items)[np.sort(kept)])
+    _, gt_local = exact_topk(_queries(), sub, k=K)
+    gt_global = np.sort(kept)[np.asarray(gt_local)]
+    res = nf.search(_queries(), k=K, ef=48)
+    assert recall_at_k(np.asarray(res.ids), gt_global) >= 0.85
+
+
+def test_composes_with_int8_storage():
+    items = _items()
+    nf32 = NormFilteredIndex(
+        keep_frac=0.5, plus=False, max_degree=12, ef_construction=32,
+        insert_batch=128,
+    ).build(items)
+    nf8 = NormFilteredIndex(
+        keep_frac=0.5, plus=False, max_degree=12, ef_construction=32,
+        insert_batch=128, storage="int8",
+    ).build(items)
+    assert nf8.inner.store is not None
+    _, gt = exact_topk(_queries(), items, k=K)
+    r32 = recall_at_k(np.asarray(nf32.search(_queries(), k=K, ef=48).ids), np.asarray(gt))
+    r8 = recall_at_k(np.asarray(nf8.search(_queries(), k=K, ef=48).ids), np.asarray(gt))
+    assert r8 >= r32 - 0.01, (r32, r8)
