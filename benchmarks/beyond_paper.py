@@ -1,4 +1,4 @@
-"""Beyond-paper extensions (EXPERIMENTS.md §Perf paper-side):
+"""Beyond-paper extensions (row schemas: docs/BENCHMARKS.md):
 
 1. HNSW-hierarchy ip-NSW (the paper's implementation footnote) vs the flat
    max-norm-entry NSW: does the layered descent buy anything when the entry

@@ -148,7 +148,10 @@ def commit_merge_bench():
     commit-merge kernel (DESIGN.md §7).
 
     One row per commit backend over the same [E] proposal table (E = B*M,
-    one insertion batch).  The pallas row is interpret-mode wall time on CPU
+    one insertion batch); the pallas row runs the auto-planned grid tile
+    and records it in ``commit_tile`` (the reference has no grid — its row
+    carries the untiled accounting, 1).  The pallas row is interpret-mode
+    wall time on CPU
     (correctness-path cost record); ``tpu_bound_us`` is the analytic
     compiled bound — U touched rows each streaming (M+1) item rows at the
     128-lane padded width, the fused path's only HBM traffic (the reference
@@ -172,14 +175,19 @@ def commit_merge_bench():
     commit_bytes = u * (m + 1) * dp * 4.0
     t_commit = commit_bytes / HBM
 
-    from repro.kernels.commit_merge import commit_merge, commit_merge_ref
+    from repro.kernels.commit_merge import (
+        commit_merge, commit_merge_ref, resolve_commit_tile,
+    )
 
+    tile = resolve_commit_tile(
+        "auto", e=e, norms=jnp.linalg.norm(items, axis=-1)
+    )
     rows = []
     for backend in COMMIT_BACKENDS:
         def run_commit():
             if backend == "pallas":
                 return commit_merge(adj, items, targets, cands, scores,
-                                    max_cands=b)
+                                    max_cands=b, commit_tile=tile)
             return commit_merge_ref(adj, items, targets, cands, scores)
 
         jax.block_until_ready(run_commit())  # warm
@@ -190,6 +198,7 @@ def commit_merge_bench():
         dt = (time.perf_counter() - t0) / reps
         rows.append(dict(
             bench="commit_merge", backend=backend, storage="f32",
+            commit_tile=tile if backend == "pallas" else 1,
             B=b, N=n, d=d,
             cpu_us_per_query=round(dt / b * 1e6, 1),
             tpu_bound_us=round(t_commit * 1e6, 3),

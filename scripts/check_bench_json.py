@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Benchmark-smoke JSON gate (CI step).
+
+Fails the benchmark-smoke step when the quick-mode build_bench JSON is
+missing the per-tile ``build_phase`` rows the tiled commit grid emits — the
+observability contract of DESIGN.md §7 / docs/BENCHMARKS.md: at least one
+pallas row with ``commit_tile > 1`` (the reclaiming layout) and one with
+``commit_tile == 1`` (the untiled baseline), every row carrying the
+``grid_steps`` / ``pad_step_frac`` columns.
+
+  python scripts/check_bench_json.py bench-artifacts/build_bench.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+REQUIRED_COLS = {
+    "commit_backend", "commit_tile", "find_s", "commit_s", "commit_share",
+    "grid_steps", "pad_step_frac",
+}
+
+
+def main(path: str) -> int:
+    with open(path) as f:
+        rows = json.load(f)
+    phase = [r for r in rows if r.get("bench") == "build_phase"]
+    if not phase:
+        print(f"[check_bench_json] {path}: no build_phase rows at all")
+        return 1
+    missing = [sorted(REQUIRED_COLS - set(r)) for r in phase if REQUIRED_COLS - set(r)]
+    if missing:
+        print(f"[check_bench_json] build_phase rows missing columns: {missing[0]}")
+        return 1
+    tiles = sorted(
+        {int(r["commit_tile"]) for r in phase if r["commit_backend"] == "pallas"}
+    )
+    if 1 not in tiles or not any(t > 1 for t in tiles):
+        print(
+            "[check_bench_json] need pallas build_phase rows for commit_tile"
+            f"=1 AND a tile > 1, got tiles={tiles}"
+        )
+        return 1
+    print(
+        f"[check_bench_json] ok: {len(phase)} build_phase rows, "
+        f"pallas tiles={tiles}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else "build_bench.json"))

@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Docs link check (CI step + tests/test_bench_smoke.py).
+
+Scans every markdown file at the repo root and under docs/ for relative
+markdown links ``[text](target)`` and verifies each target resolves to a
+file or directory in the repo.  External schemes (http/https/mailto) and
+pure in-page anchors (#...) are skipped; a ``path#anchor`` target is checked
+for the path part only (anchor slugs are not validated).  Exits non-zero
+listing every broken link.
+
+  python scripts/check_doc_links.py
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# inline links only; reference-style [text][ref] is not used in this repo.
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def doc_files() -> list:
+    files = sorted(glob.glob(os.path.join(ROOT, "*.md")))
+    files += sorted(glob.glob(os.path.join(ROOT, "docs", "**", "*.md"),
+                              recursive=True))
+    return files
+
+
+def check(files) -> list:
+    broken = []
+    for path in files:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        base = os.path.dirname(path)
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for m in LINK.finditer(line):
+                target = m.group(1)
+                if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                resolved = os.path.normpath(os.path.join(base, rel))
+                if not os.path.exists(resolved):
+                    broken.append(
+                        f"{os.path.relpath(path, ROOT)}:{lineno}: "
+                        f"broken link -> {target}"
+                    )
+    return broken
+
+
+def main() -> int:
+    files = doc_files()
+    broken = check(files)
+    for b in broken:
+        print(b)
+    print(f"[check_doc_links] {len(files)} files, {len(broken)} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

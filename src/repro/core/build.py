@@ -17,8 +17,14 @@ are committed functionally:
                     "pallas"    — kernels/commit_merge/ops.py: the fused
                                   kernel; one E-row bucketing sort, then
                                   every touched row is gathered, rescored,
-                                  deduped and re-ranked per target tile in
-                                  VMEM (interpret mode off-TPU)
+                                  deduped and re-ranked on-chip, with
+                                  ``commit_tile`` targets merged per grid
+                                  step (interpret mode off-TPU)
+
+``commit_tile`` sizes the fused commit kernel's grid tiles ("auto" resolves
+via the norm-skew planner, kernels/commit_merge/ops.resolve_commit_tile);
+build drivers resolve it on host before tracing so the scan backend gets a
+static tile honoring the heuristic.
 
 Note on faithfulness: Algorithm 2 as printed uses directed edges only; a
 literal directed build is non-navigable from a fixed entry vertex (see
@@ -38,7 +44,7 @@ Build backends (``build_backend=``, see DESIGN.md §6):
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +53,11 @@ import numpy as np
 from repro.core.graph import GraphIndex, empty_graph
 from repro.core.search import STEP_BACKENDS, beam_search
 from repro.core.similarity import Similarity, pair_scores, prepare_items
-from repro.kernels.commit_merge import commit_merge, commit_merge_ref
+from repro.kernels.commit_merge import (
+    commit_merge,
+    commit_merge_ref,
+    resolve_commit_tile,
+)
 
 NEG_INF = jnp.float32(-jnp.inf)
 
@@ -60,7 +70,10 @@ COMMIT_BACKENDS = ("reference", "pallas")
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("reverse_links", "commit_backend"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("reverse_links", "commit_backend", "commit_tile"),
+)
 def commit_batch(
     graph: GraphIndex,
     batch_ids: jax.Array,    # [B] int32 ids being inserted
@@ -70,6 +83,7 @@ def commit_batch(
     valid: Optional[jax.Array] = None,  # [B] bool, False = pad row (skipped)
     reverse_links: bool = True,
     commit_backend: str = "reference",
+    commit_tile: Union[int, str] = "auto",
 ) -> GraphIndex:
     """Write one insertion batch into the graph (forward + reverse edges) and
     advance size/entry.  ``valid`` masks pad rows of a fixed-shape batch (the
@@ -80,6 +94,11 @@ def commit_batch(
 
     ``commit_backend`` selects the reverse-link merge implementation
     (COMMIT_BACKENDS; both are bit-identical — tests/test_kernel_parity.py).
+    ``commit_tile`` sizes the fused kernel's grid tiles (ignored by the
+    reference backend; every tile commits the identical graph).  It must be
+    static: pass an int resolved by resolve_commit_tile to honor the
+    norm-skew heuristic — the bare ``"auto"`` here resolves without data to
+    DEFAULT_COMMIT_TILE.
 
     Entry maintenance is an O(B) compare of the batch's max-norm insert
     against the carried ``graph.entry_norm`` — equivalent to the historical
@@ -90,6 +109,8 @@ def commit_batch(
             f"commit_backend must be one of {COMMIT_BACKENDS}, "
             f"got {commit_backend!r}"
         )
+    resolve_commit_tile(commit_tile)  # eager knob validation (value unused
+    #                                   by the reference backend)
     n, m = graph.adj.shape
     b = batch_ids.shape[0]
 
@@ -107,7 +128,8 @@ def commit_batch(
         scores = nbr_scores.reshape(-1)
         if commit_backend == "pallas":
             adj = commit_merge(
-                adj, graph.items, targets, cands, scores, max_cands=b
+                adj, graph.items, targets, cands, scores, max_cands=b,
+                commit_tile=commit_tile,
             )
         else:
             adj = commit_merge_ref(adj, graph.items, targets, cands, scores)
@@ -211,6 +233,7 @@ def bootstrap_graph(
     insert_batch: int,
     reverse_links: bool,
     commit_backend: str = "reference",
+    commit_tile: Union[int, str] = "auto",
 ) -> GraphIndex:
     """Empty graph + the sequential-prefix first batch (shared by backends)."""
     n = prepared.shape[0]
@@ -220,7 +243,7 @@ def bootstrap_graph(
     nbr0, sc0 = _bootstrap_neighbors(prepared[:first], max_degree)
     return commit_batch(
         graph, ids0, nbr0, sc0, norms, reverse_links=reverse_links,
-        commit_backend=commit_backend,
+        commit_backend=commit_backend, commit_tile=commit_tile,
     )
 
 
@@ -240,6 +263,7 @@ def _scan_insert(
     reverse_links: bool,
     backend: str,
     commit_backend: str,
+    commit_tile: Union[int, str],
 ):
     """All remaining insertion batches as one ``lax.scan``.
 
@@ -270,6 +294,7 @@ def _scan_insert(
         g = commit_batch(
             graph, bids, nbr, sc, norms, valid=vmask,
             reverse_links=reverse_links, commit_backend=commit_backend,
+            commit_tile=commit_tile,
         )
         return (g.adj, g.size, g.entry, g.entry_norm), None
 
@@ -285,7 +310,7 @@ _scan_insert_jit = functools.partial(
     jax.jit,
     static_argnames=(
         "max_degree", "ef", "max_steps", "reverse_links", "backend",
-        "commit_backend",
+        "commit_backend", "commit_tile",
     ),
     donate_argnums=(0,),
 )(_scan_insert)
@@ -304,11 +329,15 @@ def scan_build_arrays(
     reverse_links: bool,
     backend: str,
     commit_backend: str = "reference",
+    commit_tile: Union[int, str] = "auto",
 ):
     """Fully-traced build (bootstrap + scan) -> (adj, size, entry, entry_norm).
 
     Pure function of arrays: ``build_sharded`` vmaps it over a leading shard
     axis so all P shard graphs build inside one device program.
+    ``commit_tile`` must already be static (int or the planner's "auto"
+    fallback) — resolve it on host before tracing to use the norm-skew
+    heuristic.
     """
     g = bootstrap_graph(
         prepared,
@@ -317,13 +346,14 @@ def scan_build_arrays(
         insert_batch=insert_batch,
         reverse_links=reverse_links,
         commit_backend=commit_backend,
+        commit_tile=commit_tile,
     )
     return _scan_insert(
         g.adj, g.size, g.entry, g.entry_norm, prepared, norms,
         batch_ids, batch_valid,
         max_degree=max_degree, ef=ef, max_steps=max_steps,
         reverse_links=reverse_links, backend=backend,
-        commit_backend=commit_backend,
+        commit_backend=commit_backend, commit_tile=commit_tile,
     )
 
 
@@ -340,6 +370,7 @@ def build_graph(
     backend: str = "reference",
     build_backend: str = "host",
     commit_backend: str = "reference",
+    commit_tile: Union[int, str] = "auto",
     progress: bool = False,
 ) -> GraphIndex:
     """Build an NSW proximity graph for ``items`` under ``similarity``.
@@ -350,8 +381,12 @@ def build_graph(
     (see search.STEP_BACKENDS); ``build_backend`` selects the insertion
     driver ("host" Python loop | "scan" single-compile lax.scan, see
     BUILD_BACKENDS and DESIGN.md §6); ``commit_backend`` selects the
-    reverse-link merge kernel (COMMIT_BACKENDS, DESIGN.md §7).  All three
-    are validated eagerly, before any build work starts.
+    reverse-link merge kernel (COMMIT_BACKENDS, DESIGN.md §7) and
+    ``commit_tile`` its grid tiling — a positive int, or ``"auto"`` to let
+    the planner pick the tile from the norm skew of ``items`` (resolved
+    here, on host, so both drivers — including the fully-traced scan — see
+    the same static tile).  All four are validated eagerly, before any
+    build work starts.
 
     There is deliberately NO ``storage=`` knob here: construction always
     walks and scores fp32 items, because edge-selection error compounds
@@ -376,6 +411,9 @@ def build_graph(
     prepared = prepare_items(jnp.asarray(items), similarity)
     n = prepared.shape[0]
     norms = jnp.linalg.norm(prepared, axis=-1)
+    commit_tile = resolve_commit_tile(
+        commit_tile, e=insert_batch * max_degree, norms=norms
+    )
     steps = max_steps if max_steps is not None else 2 * ef_construction
 
     if build_backend == "scan":
@@ -388,6 +426,7 @@ def build_graph(
         graph = bootstrap_graph(
             prepared, norms, max_degree=max_degree, insert_batch=insert_batch,
             reverse_links=reverse_links, commit_backend=commit_backend,
+            commit_tile=commit_tile,
         )
         _, bids, valid = batch_schedule(n, insert_batch)
         if bids.shape[0]:
@@ -397,7 +436,7 @@ def build_graph(
                 jnp.asarray(bids), jnp.asarray(valid),
                 max_degree=max_degree, ef=ef_construction, max_steps=steps,
                 reverse_links=reverse_links, backend=backend,
-                commit_backend=commit_backend,
+                commit_backend=commit_backend, commit_tile=commit_tile,
             )
             graph = GraphIndex(
                 adj=adj, items=prepared, size=size, entry=entry,
@@ -408,6 +447,7 @@ def build_graph(
     graph = bootstrap_graph(
         prepared, norms, max_degree=max_degree, insert_batch=insert_batch,
         reverse_links=reverse_links, commit_backend=commit_backend,
+        commit_tile=commit_tile,
     )
 
     start = min(insert_batch, n)
@@ -428,7 +468,7 @@ def build_graph(
             nbr, sc = neighbor_fn(graph, batch_items)
         graph = commit_batch(
             graph, bids, nbr, sc, norms, reverse_links=reverse_links,
-            commit_backend=commit_backend,
+            commit_backend=commit_backend, commit_tile=commit_tile,
         )
         if progress and (start // insert_batch) % 20 == 0:
             print(f"  inserted {stop}/{n}")

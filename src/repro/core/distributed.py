@@ -9,7 +9,7 @@ single all-gather + static top-k.
 
 Communication cost per query batch B: one all-gather of [B, k] fp32 + [B, k]
 int32 over the ``model`` axis — k*P*8 bytes per query, independent of N.
-That is the collective term analysed in EXPERIMENTS.md §Roofline.
+That is the collective term in the roofline model (launch/roofline.py).
 
 Elastic / degraded serving: ``shard_mask`` disables dead shards at merge time
 (their scores become -inf) so a lost host degrades recall instead of
@@ -92,8 +92,10 @@ def build_sharded(
     scan build per ``index_kwargs``); ``"scan"`` vmaps the fully-traced scan
     build over the shard axis, so all P shard graphs build inside ONE device
     program.  ``index_kwargs`` are IpNSW / IpNSWPlus constructor fields
-    (including ``backend=`` for the insertion walks and ``commit_backend=``
-    for the reverse-link merge kernel).  ``storage="int8"`` derives stacked
+    (including ``backend=`` for the insertion walks, ``commit_backend=`` for
+    the reverse-link merge kernel, and ``commit_tile=`` for its grid tiling
+    — the scan path resolves ``"auto"`` once, on host, from the pooled
+    shard norms, so every vmapped shard runs the same static tile).  ``storage="int8"`` derives stacked
     per-shard quantized stores post-build (builds stay fp32, DESIGN.md §8);
     pass the matching ``storage=`` to ``sharded_search`` to serve from them.
     """
@@ -154,7 +156,9 @@ def _build_sharded_scan(
     **index_kwargs,
 ) -> ShardedIndex:
     """Shard-parallel scan build: one jit, vmap over the shard axis."""
-    from repro.core.build import batch_schedule, scan_build_arrays
+    from repro.core.build import (
+        batch_schedule, resolve_commit_tile, scan_build_arrays,
+    )
     from repro.core.ipnsw import IpNSW
     from repro.core.ipnsw_plus import IpNSWPlus, scan_build_plus_arrays
     from repro.core.similarity import normalize
@@ -165,6 +169,13 @@ def _build_sharded_scan(
     per = int(locals_[0].shape[0])
     stacked = jnp.stack(locals_)                      # [P, Nloc, d]
     norms = jnp.linalg.norm(stacked, axis=-1)         # [P, Nloc]
+    # Static tile for every shard's commits, resolved before the vmap trace
+    # (inside it the norms are abstract and "auto" could not use the skew).
+    commit_tile = resolve_commit_tile(
+        proto.commit_tile,
+        e=proto.insert_batch * proto.max_degree,
+        norms=norms,
+    )
     _, bids, valid = batch_schedule(per, proto.insert_batch)
     bids, valid = jnp.asarray(bids), jnp.asarray(valid)
     offsets = jnp.asarray([s * per for s in range(p)], jnp.int32)
@@ -184,6 +195,7 @@ def _build_sharded_scan(
             reverse_links=proto.reverse_links,
             backend=proto.backend,
             commit_backend=proto.commit_backend,
+            commit_tile=commit_tile,
         )
         (a_adj, a_size, a_entry, a_enorm,
          i_adj, i_size, i_entry, i_enorm) = jax.jit(
@@ -204,6 +216,7 @@ def _build_sharded_scan(
         reverse_links=proto.reverse_links,
         backend=proto.backend,
         commit_backend=proto.commit_backend,
+        commit_tile=commit_tile,
     )
     adj, size, entry, enorm = jax.jit(
         jax.vmap(lambda it, no: fn(it, no, bids, valid))

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Union
 
 import numpy as np
 import jax
@@ -72,6 +72,7 @@ class HierarchicalIpNSW:
     backend: str = "reference"       # walk step backend (search.STEP_BACKENDS)
     build_backend: str = "host"      # insertion driver (build.BUILD_BACKENDS)
     commit_backend: str = "reference"  # reverse-link merge (COMMIT_BACKENDS)
+    commit_tile: Union[int, str] = "auto"  # fused-commit grid tiling (§7)
     storage: str = "f32"             # item store search streams (DESIGN.md §8)
     levels: List[GraphIndex] = field(default_factory=list)
     ids: List[np.ndarray] = field(default_factory=list)       # level -> global ids
@@ -101,6 +102,7 @@ class HierarchicalIpNSW:
                 backend=self.backend,
                 build_backend=self.build_backend,
                 commit_backend=self.commit_backend,
+                commit_tile=self.commit_tile,
                 progress=progress and level == 0,
             )
             inv = np.full(n, -1, np.int32)

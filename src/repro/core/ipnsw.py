@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +51,10 @@ class IpNSW:
     walk step implementation ("reference" | "pallas", see search.py);
     ``build_backend`` selects the insertion driver ("host" | "scan", see
     build.BUILD_BACKENDS); ``commit_backend`` selects the reverse-link merge
-    kernel ("reference" | "pallas", see build.COMMIT_BACKENDS); ``storage``
+    kernel ("reference" | "pallas", see build.COMMIT_BACKENDS) and
+    ``commit_tile`` its grid tiling (positive int, or "auto" for the
+    norm-skew planner — kernels/commit_merge/ops.resolve_commit_tile);
+    ``storage``
     selects the item representation search streams ("f32" | "int8", see
     storage.STORAGE_BACKENDS and DESIGN.md §8 — the build always runs on
     fp32 items and the quantized store is derived once post-build).
@@ -64,6 +67,7 @@ class IpNSW:
     backend: str = "reference"
     build_backend: str = "host"
     commit_backend: str = "reference"
+    commit_tile: Union[int, str] = "auto"
     storage: str = "f32"
     graph: Optional[GraphIndex] = None
     store: Optional[ItemStore] = None
@@ -80,6 +84,7 @@ class IpNSW:
             backend=self.backend,
             build_backend=self.build_backend,
             commit_backend=self.commit_backend,
+            commit_tile=self.commit_tile,
             progress=progress,
         )
         # Derived once from the frozen fp32 items; None for the f32 path.

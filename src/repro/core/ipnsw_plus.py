@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +37,7 @@ from repro.core.build import (
     batch_schedule,
     commit_batch,
     find_neighbors,
+    resolve_commit_tile,
 )
 from repro.core.graph import GraphIndex, empty_graph
 from repro.core.search import SearchResult, beam_search
@@ -151,6 +152,7 @@ class IpNSWPlus:
     backend: str = "reference"    # walk step backend (search.STEP_BACKENDS)
     build_backend: str = "host"   # insertion driver (build.BUILD_BACKENDS)
     commit_backend: str = "reference"  # reverse-link merge (COMMIT_BACKENDS)
+    commit_tile: Union[int, str] = "auto"  # fused-commit grid tiling (§7)
     storage: str = "f32"          # item store search streams (DESIGN.md §8)
     ang_graph: Optional[GraphIndex] = field(default=None)
     ip_graph: Optional[GraphIndex] = field(default=None)
@@ -182,6 +184,15 @@ class IpNSWPlus:
         ang_items = normalize(items)
         norms = jnp.linalg.norm(items, axis=-1)
         ang_norms = jnp.ones((n,), jnp.float32)
+        # One static tile for BOTH graphs' commits, resolved on host from the
+        # raw item norms: the hub skew that makes targets collapse lives in
+        # the ip graph; the angular graph shares the tile so the scan carry
+        # stays a single static geometry.
+        commit_tile = resolve_commit_tile(
+            self.commit_tile,
+            e=self.insert_batch * min(self.max_degree, self.ang_degree),
+            norms=norms,
+        )
 
         if self.build_backend == "scan":
             _, bids, valid = batch_schedule(n, self.insert_batch)
@@ -197,6 +208,7 @@ class IpNSWPlus:
                 reverse_links=self.reverse_links,
                 backend=self.backend,
                 commit_backend=self.commit_backend,
+                commit_tile=commit_tile,
             )
             (a_adj, a_size, a_entry, a_enorm,
              i_adj, i_size, i_entry, i_enorm) = arrays
@@ -215,12 +227,14 @@ class IpNSWPlus:
             ang, ids0, a_nbr0, a_sc0, ang_norms,
             reverse_links=self.reverse_links,
             commit_backend=self.commit_backend,
+            commit_tile=commit_tile,
         )
         g_nbr0, g_sc0 = _bootstrap_neighbors(items[:first], self.max_degree)
         ip = commit_batch(
             ip, ids0, g_nbr0, g_sc0, norms,
             reverse_links=self.reverse_links,
             commit_backend=self.commit_backend,
+            commit_tile=commit_tile,
         )
 
         ang_steps = 2 * max(self.ang_ef, self.ang_degree)
@@ -244,6 +258,7 @@ class IpNSWPlus:
                 ang, bids, a_nbr, a_sc, ang_norms,
                 reverse_links=self.reverse_links,
                 commit_backend=self.commit_backend,
+                commit_tile=commit_tile,
             )
 
             # 2. insert into the ip graph with the ip-NSW+ search itself:
@@ -261,6 +276,7 @@ class IpNSWPlus:
                 ip, bids, g_nbr, g_sc, norms,
                 reverse_links=self.reverse_links,
                 commit_backend=self.commit_backend,
+                commit_tile=commit_tile,
             )
 
             if progress and (start // self.insert_batch) % 20 == 0:
@@ -373,6 +389,7 @@ def scan_build_plus_arrays(
     reverse_links: bool,
     backend: str,
     commit_backend: str = "reference",
+    commit_tile: Union[int, str] = "auto",
 ):
     """Fully-traced ip-NSW+ build: bootstrap both graphs, then one
     ``lax.scan`` whose carry holds *both* adjacencies, so the §4.2
@@ -380,7 +397,9 @@ def scan_build_plus_arrays(
     intact with zero host round-trips.  Returns
     ``(ang_adj, ang_size, ang_entry, ang_entry_norm,
        ip_adj, ip_size, ip_entry, ip_entry_norm)``.
-    ``build_sharded`` vmaps this over a leading shard axis."""
+    ``build_sharded`` vmaps this over a leading shard axis.  ``commit_tile``
+    must already be static — resolve "auto" on host before tracing to use
+    the norm-skew heuristic (IpNSWPlus.build does)."""
     n = items.shape[0]
     ang = empty_graph(ang_items, ang_degree)
     ip = empty_graph(items, max_degree)
@@ -390,12 +409,12 @@ def scan_build_plus_arrays(
     a_nbr0, a_sc0 = _bootstrap_neighbors(ang_items[:first], ang_degree)
     ang = commit_batch(
         ang, ids0, a_nbr0, a_sc0, ang_norms, reverse_links=reverse_links,
-        commit_backend=commit_backend,
+        commit_backend=commit_backend, commit_tile=commit_tile,
     )
     g_nbr0, g_sc0 = _bootstrap_neighbors(items[:first], max_degree)
     ip = commit_batch(
         ip, ids0, g_nbr0, g_sc0, norms, reverse_links=reverse_links,
-        commit_backend=commit_backend,
+        commit_backend=commit_backend, commit_tile=commit_tile,
     )
 
     ang_steps = 2 * max(ang_ef, ang_degree)
@@ -422,7 +441,7 @@ def scan_build_plus_arrays(
             jnp.where(vmask[:, None], a_nbr, -1),
             jnp.where(vmask[:, None], a_sc, NEG_INF),
             ang_norms, valid=vmask, reverse_links=reverse_links,
-            commit_backend=commit_backend,
+            commit_backend=commit_backend, commit_tile=commit_tile,
         )
 
         # 2. insert into the ip graph with the ip-NSW+ search itself,
@@ -442,7 +461,7 @@ def scan_build_plus_arrays(
             jnp.where(vmask[:, None], g_nbr, -1),
             jnp.where(vmask[:, None], g_sc, NEG_INF),
             norms, valid=vmask, reverse_links=reverse_links,
-            commit_backend=commit_backend,
+            commit_backend=commit_backend, commit_tile=commit_tile,
         )
         return (ang2.adj, ang2.size, ang2.entry, ang2.entry_norm,
                 ip2.adj, ip2.size, ip2.entry, ip2.entry_norm), None
@@ -461,5 +480,6 @@ _scan_build_plus_jit = functools.partial(
     static_argnames=(
         "max_degree", "ef_construction", "ang_degree", "ang_ef", "k_angular",
         "insert_batch", "reverse_links", "backend", "commit_backend",
+        "commit_tile",
     ),
 )(scan_build_plus_arrays)

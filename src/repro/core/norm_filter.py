@@ -36,7 +36,13 @@ class NormFilteredIndex:
     max_degree: int = 16
     ef_construction: int = 64
     insert_batch: int = 256
-    storage: str = "f32"   # forwarded to the inner index (DESIGN.md §8)
+    # The four backend axes (docs/ARCHITECTURE.md), forwarded verbatim to
+    # the inner IpNSW / IpNSWPlus — the filter is a pure id-remapping shell.
+    backend: str = "reference"
+    build_backend: str = "host"
+    commit_backend: str = "reference"
+    commit_tile: object = "auto"   # int | "auto" (DESIGN.md §7)
+    storage: str = "f32"
     inner: object = field(default=None)
     global_ids: Optional[np.ndarray] = None
 
@@ -57,6 +63,10 @@ class NormFilteredIndex:
             max_degree=self.max_degree,
             ef_construction=self.ef_construction,
             insert_batch=self.insert_batch,
+            backend=self.backend,
+            build_backend=self.build_backend,
+            commit_backend=self.commit_backend,
+            commit_tile=self.commit_tile,
             storage=self.storage,
         ).build(sub, progress=progress)
         return self

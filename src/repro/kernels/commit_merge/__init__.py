@@ -1,4 +1,13 @@
-from repro.kernels.commit_merge.ops import commit_merge
+from repro.kernels.commit_merge.ops import (
+    DEFAULT_COMMIT_TILE,
+    commit_merge,
+    resolve_commit_tile,
+)
 from repro.kernels.commit_merge.ref import commit_merge_ref
 
-__all__ = ["commit_merge", "commit_merge_ref"]
+__all__ = [
+    "DEFAULT_COMMIT_TILE",
+    "commit_merge",
+    "commit_merge_ref",
+    "resolve_commit_tile",
+]

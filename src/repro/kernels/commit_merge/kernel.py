@@ -1,35 +1,41 @@
 """Fused commit-merge Pallas TPU kernel — the reverse-link top-M merge of the
-batched Algorithm-2 commit, one target row per grid step, entirely in VMEM.
+batched Algorithm-2 commit, one tile of ``T`` distinct targets per grid step,
+entirely in VMEM.
 
 The reference path (``commit_merge_ref``) builds an ``E·(M+1)``-row edge
 table (every proposal plus every existing edge of every touched target) and
 pushes it through TWO device-wide ``lax.sort`` passes, materializing the
 ``[E, M, d]`` gathered neighbor vectors and the full table in HBM between
 stages.  Here the wrapper (``ops.py``) buckets only the ``E`` proposals to
-target tiles with ONE E-row sort, and each grid step finishes one touched
-row on-chip:
+target rows with ONE E-row sort, packs ``T`` rows per grid step, and each
+step finishes its tile of touched rows on-chip:
 
-  1. DMA the target's adjacency row HBM->SMEM (scalar ids for the gather
-     loop) and HBM->VMEM (vector lanes), and the target's item vector
-     HBM->VMEM;
-  2. DMA the M existing-neighbor item rows HBM->VMEM — all copies started
-     before any wait, so on TPU the fetches overlap (same explicit-DMA idiom
-     as ``beam_step``: the ids are read from the row *inside* the kernel, so
-     a scalar-prefetch BlockSpec cannot express them);
-  3. rescore the existing edges against the target vector (MXU), drop
-     existing slots that duplicate a proposal (the proposal's score wins)
-     or an earlier existing slot;
+  1. DMA each live target's adjacency row HBM->SMEM (scalar ids for the
+     gather loop) and HBM->VMEM (vector lanes), and each target's item
+     vector HBM->VMEM — T targets' copies all started before any wait;
+  2. DMA the tile's T·M existing-neighbor item rows HBM->VMEM (same
+     explicit-DMA idiom as ``beam_step``: the ids are read from the rows
+     *inside* the kernel, so a scalar-prefetch BlockSpec cannot express
+     them);
+  3. rescore the existing edges against their target vector (MXU, one
+     [1, M]·[M, dp] dot per tile row), drop existing slots that duplicate a
+     proposal (the proposal's score wins) or an earlier existing slot;
   4. rank proposals + surviving existing edges with the ``ranked_top_m``
-     selection network and write the row's new top-M ids.
+     selection network — batched over the T tile rows — and write the
+     tile's new top-M id rows.
 
-Only the final ``[1, M]`` id row returns to HBM per step.  Pad steps
-(``target < 0`` — the bucket table is sized for the worst case of all-unique
-targets) skip every DMA and emit an all ``-1`` row that the wrapper scatters
-into a dummy row.
+Only the final ``[T, M]`` id rows return to HBM per step.  The wrapper
+compacts live targets to a contiguous bucket-row prefix, so a fully-pad tile
+(every ``target < 0``) skips every DMA and emits all ``-1`` rows that the
+wrapper scatters into a dummy slot; at most one tile per call is partially
+live, and its dead rows fetch (and then fully mask) row 0.
 
-VMEM budget per step: (M+1)·dp·4 (target + neighbor rows) + (2K + 3M) words
-— ~12 KB for M=16, dp=128, K=512; far under the ~16 MB/core limit, so a
-later revision could tile many targets per step.
+``T = 1`` degenerates to the original one-target-per-step layout, which is
+how the pre-tiling grid remains expressible (and tested).
+
+VMEM budget per step: T·(M+1)·dp·4 (target + neighbor rows) + T·(2K + 3M)
+words — ~105 KB for T=8, M=16, dp=128, K=512 (~140 KB counting the tile's
+bucket input blocks); far under the ~16 MB/core limit.
 """
 from __future__ import annotations
 
@@ -72,72 +78,103 @@ def ranked_top_m(ids, scores, valid, m: int):
 def _commit_merge_kernel(
     tgt_ref, bi_ref, bs_ref,          # VMEM-blocked inputs (one target tile)
     adj_hbm, items_hbm,               # whole arrays, ANY/HBM
-    out_ref,                          # [1, M] new row ids
+    out_ref,                          # [T, M] new row ids
     adj_smem, adj_vmem, tvec_ref, rows_ref, sems,
     *,
     m: int,
+    t: int,
 ):
-    t = tgt_ref[0, 0]
-    live = t >= 0
-    tsafe = jnp.maximum(t, 0)
+    tgt = tgt_ref[...]                                # [T, 1]
+    live = tgt >= 0                                   # [T, 1]
+    # The wrapper compacts live targets to a bucket-row prefix, so a tile
+    # with a dead first row is entirely pad and skips all DMA (its outputs
+    # are fully masked by ``live`` below, so stale/uninitialized scratch
+    # contents are never observable).  Dead rows inside the one partially
+    # live tile fall through with clamped ids and fetch row 0 harmlessly.
+    live_any = tgt_ref[0, 0] >= 0
 
-    # Pad steps skip all DMA: their outputs are fully masked by ``live``
-    # below, so stale/uninitialized scratch contents are never observable.
-    @pl.when(live)
+    @pl.when(live_any)
     def _fetch():
-        # --- 1. adjacency row (SMEM scalars + VMEM lanes) + target vector ---
-        adj_s = pltpu.make_async_copy(
-            adj_hbm.at[pl.ds(tsafe, 1), :], adj_smem, sems.at[m]
-        )
-        adj_v = pltpu.make_async_copy(
-            adj_hbm.at[pl.ds(tsafe, 1), :], adj_vmem, sems.at[m + 1]
-        )
-        tv = pltpu.make_async_copy(
-            items_hbm.at[pl.ds(tsafe, 1), :], tvec_ref, sems.at[m + 2]
-        )
-        adj_s.start()
-        adj_v.start()
-        tv.start()
-        adj_s.wait()
-        adj_v.wait()
-
-        # --- 2. gather the M existing-neighbor rows (start all, wait all) ---
-        def _row_copy(j):
-            nid = jnp.maximum(adj_smem[0, j], 0)
+        # --- 1. adjacency rows (SMEM scalars + VMEM lanes) + target vectors —
+        # all T targets' copies started before any wait, so the fetches
+        # overlap on TPU.  ``i`` is a static Python index (T is static).
+        def _adj_s(i):
+            ti = jnp.maximum(tgt_ref[i, 0], 0)
             return pltpu.make_async_copy(
-                items_hbm.at[pl.ds(nid, 1), :], rows_ref.at[pl.ds(j, 1), :],
-                sems.at[j],
+                adj_hbm.at[pl.ds(ti, 1), :], adj_smem.at[pl.ds(i, 1), :],
+                sems.at[t * m + i],
             )
 
-        jax.lax.fori_loop(0, m, lambda j, c: (_row_copy(j).start(), c)[1], 0)
-        jax.lax.fori_loop(0, m, lambda j, c: (_row_copy(j).wait(), c)[1], 0)
-        tv.wait()
+        def _adj_v(i):
+            ti = jnp.maximum(tgt_ref[i, 0], 0)
+            return pltpu.make_async_copy(
+                adj_hbm.at[pl.ds(ti, 1), :], adj_vmem.at[pl.ds(i, 1), :],
+                sems.at[t * m + t + i],
+            )
 
-    # --- 3. dedup + rescore — all in VMEM -----------------------------------
-    new_ids = bi_ref[...]                             # [1, K] (-1 padded)
+        def _tv(i):
+            ti = jnp.maximum(tgt_ref[i, 0], 0)
+            return pltpu.make_async_copy(
+                items_hbm.at[pl.ds(ti, 1), :], tvec_ref.at[pl.ds(i, 1), :],
+                sems.at[t * m + 2 * t + i],
+            )
+
+        for i in range(t):
+            _adj_s(i).start()
+            _adj_v(i).start()
+            _tv(i).start()
+        for i in range(t):
+            _adj_s(i).wait()
+
+        # --- 2. gather the T·M existing-neighbor rows (start all, wait all) —
+        # neighbor ids come from the adjacency rows just landed in SMEM; the
+        # flat row index p maps to (tile row p // M, slot p % M).
+        def _row_copy(p):
+            nid = jnp.maximum(adj_smem[p // m, p % m], 0)
+            return pltpu.make_async_copy(
+                items_hbm.at[pl.ds(nid, 1), :], rows_ref.at[pl.ds(p, 1), :],
+                sems.at[p],
+            )
+
+        jax.lax.fori_loop(0, t * m, lambda p, c: (_row_copy(p).start(), c)[1], 0)
+        jax.lax.fori_loop(0, t * m, lambda p, c: (_row_copy(p).wait(), c)[1], 0)
+        for i in range(t):
+            _adj_v(i).wait()
+            _tv(i).wait()
+
+    # --- 3. dedup + rescore — all in VMEM, batched over the T tile rows ----
+    new_ids = bi_ref[...]                             # [T, K] (-1 padded)
     new_valid = (new_ids >= 0) & live
     new_scores = jnp.where(new_valid, bs_ref[...], NEG_INF)
 
-    ex_ids = adj_vmem[...]                            # [1, M]
+    ex_ids = adj_vmem[...]                            # [T, M]
     # existing slot duplicated by a proposal -> dropped (proposal score wins)
     in_new = (
         (ex_ids[:, :, None] == new_ids[:, None, :]) & new_valid[:, None, :]
     ).any(axis=-1)
     # existing slot repeating an earlier existing slot -> dropped (keep first)
     eq = ex_ids[:, :, None] == ex_ids[:, None, :]
-    jj = jax.lax.broadcasted_iota(jnp.int32, (1, m, m), 1)
-    kk = jax.lax.broadcasted_iota(jnp.int32, (1, m, m), 2)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (t, m, m), 1)
+    kk = jax.lax.broadcasted_iota(jnp.int32, (t, m, m), 2)
     ex_dup = (eq & (kk < jj)).any(axis=-1)
     ex_valid = (ex_ids >= 0) & live & ~in_new & ~ex_dup
 
-    ex_scores = jax.lax.dot_general(
-        tvec_ref[...], rows_ref[...],
-        (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )                                                 # [1, M]
+    tvec = tvec_ref[...]                              # [T, dp]
+    rows = rows_ref[...]                              # [T*M, dp]
+    ex_scores = jnp.concatenate(
+        [
+            jax.lax.dot_general(
+                tvec[i : i + 1, :], rows[i * m : (i + 1) * m, :],
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            for i in range(t)
+        ],
+        axis=0,
+    )                                                 # [T, M]
     ex_scores = jnp.where(ex_valid, ex_scores, NEG_INF)
 
-    # --- 4. rank and rewrite the row ----------------------------------------
+    # --- 4. rank and rewrite the tile's rows --------------------------------
     cand_i = jnp.concatenate(
         [jnp.where(new_valid, new_ids, -1), jnp.where(ex_valid, ex_ids, -1)],
         axis=1,
@@ -148,42 +185,48 @@ def _commit_merge_kernel(
 
 
 def commit_merge_pallas(
-    utgt: jax.Array,          # [G, 1] int32 unique targets (-1 pad steps)
+    utgt: jax.Array,          # [G, 1] int32 unique targets (-1 pad rows,
+    #                           live rows a contiguous prefix)
     bucket_ids: jax.Array,    # [G, K] int32 deduped proposal ids (-1 padded)
     bucket_scores: jax.Array, # [G, K] fp32 proposal scores
     adj: jax.Array,           # [N, M] int32 (-1 padded)
     items: jax.Array,         # [N, dp] fp32, dp a lane multiple
     *,
+    tile: int = 1,
     interpret: bool = True,
 ):
-    """One fused reverse-link merge step per unique target.  Returns the
-    ``[G, M]`` rewritten row ids (all ``-1`` for pad steps); the wrapper owns
-    the bucketing pre-pass and the row scatter."""
+    """One fused reverse-link merge step per tile of ``tile`` unique targets.
+    ``G`` must be a multiple of ``tile`` (the wrapper pads the bucket table).
+    Returns the ``[G, M]`` rewritten row ids (all ``-1`` for pad rows); the
+    wrapper owns the bucketing pre-pass, the tile padding, and the row
+    scatter."""
     g = utgt.shape[0]
     k = bucket_ids.shape[1]
     m = adj.shape[1]
     dp = items.shape[1]
+    if g % tile:
+        raise ValueError(f"bucket rows ({g}) must be a multiple of tile ({tile})")
 
     spec_any = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
 
     return pl.pallas_call(
-        functools.partial(_commit_merge_kernel, m=m),
-        grid=(g,),
+        functools.partial(_commit_merge_kernel, m=m, t=tile),
+        grid=(g // tile,),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),   # target id
-            pl.BlockSpec((1, k), lambda i: (i, 0)),   # proposal ids
-            pl.BlockSpec((1, k), lambda i: (i, 0)),   # proposal scores
-            spec_any,                                 # adj (HBM)
-            spec_any,                                 # items (HBM)
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),   # target ids
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),   # proposal ids
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),   # proposal scores
+            spec_any,                                    # adj (HBM)
+            spec_any,                                    # items (HBM)
         ],
-        out_specs=pl.BlockSpec((1, m), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((tile, m), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((g, m), jnp.int32),
         scratch_shapes=[
-            pltpu.SMEM((1, m), jnp.int32),
-            pltpu.VMEM((1, m), jnp.int32),
-            pltpu.VMEM((1, dp), jnp.float32),
-            pltpu.VMEM((m, dp), jnp.float32),
-            pltpu.SemaphoreType.DMA((m + 3,)),
+            pltpu.SMEM((tile, m), jnp.int32),
+            pltpu.VMEM((tile, m), jnp.int32),
+            pltpu.VMEM((tile, dp), jnp.float32),
+            pltpu.VMEM((tile * m, dp), jnp.float32),
+            pltpu.SemaphoreType.DMA((tile * (m + 3),)),
         ],
         interpret=interpret,
     )(utgt, bucket_ids, bucket_scores, adj, items)

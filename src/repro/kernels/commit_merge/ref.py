@@ -6,6 +6,12 @@ This IS the reference backend of ``core.build.commit_batch``: the commit
 dispatch calls it directly, so the oracle and the production reference path
 cannot drift apart (same contract as ``kernels/beam_step/ref.py``).
 
+The oracle is deliberately UNtiled: it has no grid, no buckets and no
+``commit_tile`` knob — its two device-wide sorts define the semantics every
+(tile, backend) combination of the fused path must reproduce bit-for-bit,
+so the tiling geometry can never leak into the contract it is tested
+against (DESIGN.md §7).
+
 Semantics (what any commit backend must reproduce bit-for-bit):
   * every edge ``(targets[i], cands[i], scores[i])`` proposes ``cands[i]`` as
     a reverse neighbor of ``targets[i]``; entries with ``targets[i] < 0`` are

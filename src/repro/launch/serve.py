@@ -4,7 +4,7 @@ stage (--index ipnsw_plus), the ip-NSW baseline, or the exact scan.
   PYTHONPATH=src python -m repro.launch.serve --index ipnsw_plus \
       --n-items 20000 --batch 256 --ef 40 [--shards 4] \
       [--backend pallas] [--build-backend scan] [--commit-backend pallas] \
-      [--storage int8]
+      [--commit-tile auto|N] [--storage int8]
 
 With --shards > 1, items are row-sharded into shard-local sub-indexes and
 queries fan out via shard_map (requires that many local devices; use
@@ -44,6 +44,11 @@ def main():
     ap.add_argument("--commit-backend", default="reference",
                     choices=["reference", "pallas"],
                     help="reverse-link merge kernel (build.COMMIT_BACKENDS)")
+    ap.add_argument("--commit-tile", default="auto",
+                    type=lambda s: s if s == "auto" else int(s),
+                    help="targets merged per fused-commit grid step: a "
+                         "positive int, or 'auto' to let the planner pick "
+                         "from the norm skew (DESIGN.md §7)")
     ap.add_argument("--storage", default="f32",
                     choices=["f32", "int8"],
                     help="item store the walks stream "
@@ -68,6 +73,7 @@ def main():
                               build_backend=args.build_backend,
                               backend=args.backend,
                               commit_backend=args.commit_backend,
+                              commit_tile=args.commit_tile,
                               storage=args.storage,
                               max_degree=16, ef_construction=32,
                               insert_batch=512)
@@ -100,6 +106,7 @@ def main():
                     backend=args.backend,
                     build_backend=args.build_backend,
                     commit_backend=args.commit_backend,
+                    commit_tile=args.commit_tile,
                     storage=args.storage).build(items)
         r = index.search(queries, k=args.k, ef=args.ef)  # compile warmup
         jax.block_until_ready(r.ids)

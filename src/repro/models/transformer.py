@@ -56,8 +56,8 @@ class TransformerConfig:
     # dim over "model" between blocks (activation memory / P; the AG/RS pair
     # it induces is the Megatron-SP schedule).  Applied when S >= 2048.
     seq_parallel: bool = True
-    # §Perf knobs (EXPERIMENTS.md): online-softmax attention + chunked
-    # cross-entropy keep the fp32 score/logit matrices off HBM.
+    # Perf knobs: online-softmax attention + chunked cross-entropy keep the
+    # fp32 score/logit matrices off HBM.
     flash: bool = True
     kv_chunk: int = 1024
     loss_chunk: int = 1024  # 0 = materialize full [B, S, V] logits

@@ -139,6 +139,21 @@ def test_commit_backend_bit_identical(profile, build_backend):
     assert float(ref.entry_norm) == float(pal.entry_norm)
 
 
+@pytest.mark.parametrize("build_backend", ("host", "scan"))
+def test_commit_tile_bit_identical_across_drivers(build_backend):
+    """The tiled commit grid (DESIGN.md §7) is pure geometry: host and scan
+    builds at a non-default tile — including the auto-planned one — must
+    commit the exact graph the untiled reference does."""
+    items = jnp.asarray(mips_dataset(NC, D, profile="lognormal", seed=7))
+    kw = dict(max_degree=8, ef_construction=16, insert_batch=CB_BATCH,
+              build_backend=build_backend)
+    ref = build_graph(items, **kw)
+    for tile in (5, "auto"):
+        tiled = build_graph(items, **kw, commit_backend="pallas",
+                            commit_tile=tile)
+        _assert_graphs_identical(ref, tiled)
+
+
 def test_commit_backend_bit_identical_plus_scan():
     """ip-NSW+ scan build: BOTH carried graphs (angular + ip) must match
     across commit backends — the §4.2 interleaving amplifies any drift."""

@@ -8,7 +8,12 @@ import jax.numpy as jnp
 import pytest
 
 from repro.kernels.beam_step import beam_step, beam_step_ref
-from repro.kernels.commit_merge import commit_merge, commit_merge_ref
+from repro.kernels.commit_merge import (
+    DEFAULT_COMMIT_TILE,
+    commit_merge,
+    commit_merge_ref,
+    resolve_commit_tile,
+)
 from repro.kernels.gather_score import gather_score, gather_score_ref
 from repro.kernels.mips_topk import mips_topk, mips_topk_ref
 from repro.kernels.quant_score import quant_score, quant_score_ref
@@ -259,6 +264,136 @@ def test_commit_merge_max_cands_exact_bound(rng):
     cands = np.arange(10, dtype=np.int32)
     scores = rng.normal(size=(10,)).astype(np.float32)
     _assert_commit_parity(adj, items, targets, cands, scores, max_cands=10)
+
+
+# ---------------------------------------------------------------------------
+# commit_merge tiling: every commit_tile must reproduce the untiled reference
+# bit-for-bit — the tile is grid geometry, never semantics (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+def _hub_batch(rng, n, e, hubs):
+    """A heavy-duplicate proposal table: most targets collapse onto a few
+    large-norm hubs (the paper's Fig-4 in-degree skew), plus a unique tail."""
+    targets = np.where(
+        rng.random(e) < 0.8,
+        rng.choice(hubs, size=e),
+        rng.integers(0, n, size=e),
+    ).astype(np.int32)
+    cands = rng.integers(-1, n, size=(e,)).astype(np.int32)
+    scores = rng.normal(size=(e,)).astype(np.float32)
+    return targets, cands, scores
+
+
+@pytest.mark.parametrize("tile", [1, 2, 3, 5, 8, 16])
+def test_commit_merge_tiled_hub_duplicates_bit_exact(rng, tile):
+    """Hub-heavy batches across tile sizes, including tiles that do not
+    divide the distinct-target count and tiles larger than it."""
+    n, m, e, d = 60, 4, 48, 8
+    items = rng.normal(size=(n, d)).astype(np.float32)
+    adj = rng.integers(-1, n, size=(n, m)).astype(np.int32)
+    targets, cands, scores = _hub_batch(rng, n, e, hubs=np.array([7, 11, 40]))
+    _assert_commit_parity(adj, items, targets, cands, scores, commit_tile=tile)
+
+
+@pytest.mark.parametrize("tile", [2, 4, 7])
+def test_commit_merge_tile_not_dividing_distinct_count(rng, tile):
+    """Exactly 5 distinct targets: every tile here leaves a partially live
+    tile (5 % tile != 0), the one tile whose dead rows run clamped DMAs."""
+    n, m, d = 40, 3, 8
+    items = rng.normal(size=(n, d)).astype(np.float32)
+    adj = rng.integers(-1, n, size=(n, m)).astype(np.int32)
+    targets = np.array([2, 9, 9, 17, 17, 17, 23, 31, 31, 2], np.int32)
+    cands = rng.integers(0, n, size=(10,)).astype(np.int32)
+    scores = rng.normal(size=(10,)).astype(np.float32)
+    assert len(np.unique(targets)) == 5
+    _assert_commit_parity(adj, items, targets, cands, scores, commit_tile=tile)
+
+
+@pytest.mark.parametrize("tile", [1, 4, 16, 64])
+def test_commit_merge_all_duplicates_single_target(rng, tile):
+    """The extreme hub case: EVERY proposal lands on one target, so one tile
+    row is live and every other grid step is pad — including tiles larger
+    than the proposal count (clamped to E by the planner)."""
+    n, m, e, d = 50, 4, 32, 8
+    items = rng.normal(size=(n, d)).astype(np.float32)
+    adj = rng.integers(-1, n, size=(n, m)).astype(np.int32)
+    targets = np.full((e,), 13, np.int32)
+    cands = rng.integers(0, n, size=(e,)).astype(np.int32)
+    scores = rng.normal(size=(e,)).astype(np.float32)
+    _assert_commit_parity(adj, items, targets, cands, scores, commit_tile=tile)
+
+
+def test_commit_merge_tile_one_degenerates_to_untiled(rng):
+    """T=1 is the pre-tiling one-target-per-step layout: same results as any
+    other tile and as the reference, on a batch with pads + duplicates."""
+    n, m, e, d = 50, 4, 33, 8
+    items = rng.normal(size=(n, d)).astype(np.float32)
+    adj = rng.integers(-1, n, size=(n, m)).astype(np.int32)
+    targets = rng.integers(-1, n, size=(e,)).astype(np.int32)
+    cands = rng.integers(-1, n, size=(e,)).astype(np.int32)
+    scores = rng.normal(size=(e,)).astype(np.float32)
+    args = tuple(map(jnp.asarray, (adj, items, targets, cands, scores)))
+    ref = np.asarray(commit_merge_ref(*args))
+    t1 = np.asarray(commit_merge(*args, commit_tile=1))
+    t8 = np.asarray(commit_merge(*args, commit_tile=8))
+    assert np.array_equal(ref, t1)
+    assert np.array_equal(t1, t8)
+
+
+def test_commit_merge_tiled_all_invalid_batch(rng):
+    """A fully-masked commit stays a no-op under tiling (every grid step is
+    a pad tile that must skip all DMA and write nothing)."""
+    n, m, e, d = 40, 3, 24, 8
+    items = rng.normal(size=(n, d)).astype(np.float32)
+    adj = rng.integers(-1, n, size=(n, m)).astype(np.int32)
+    targets = np.full((e,), -1, np.int32)
+    cands = rng.integers(-1, n, size=(e,)).astype(np.int32)
+    scores = rng.normal(size=(e,)).astype(np.float32)
+    out = commit_merge(
+        *map(jnp.asarray, (adj, items, targets, cands, scores)), commit_tile=8
+    )
+    assert np.array_equal(np.asarray(out), adj)
+
+
+def test_resolve_commit_tile_planner():
+    """The tiling planner: ints validate and clamp; "auto" climbs the
+    norm-skew ladder (flat norms -> 4, gaussian-ish -> 8, heavy tail -> 16)
+    and falls back to the default without data."""
+    assert resolve_commit_tile(5) == 5
+    assert resolve_commit_tile(5, e=3) == 3
+    assert resolve_commit_tile(1000, e=4096) == 32  # MAX_COMMIT_TILE cap
+    assert resolve_commit_tile("auto") == DEFAULT_COMMIT_TILE
+    assert resolve_commit_tile("auto", norms=np.ones(64)) == 4
+    rng = np.random.default_rng(0)
+    heavy = np.exp(rng.normal(size=2000))  # lognormal, cv > 0.6
+    assert resolve_commit_tile("auto", norms=heavy) == 16
+    for bad in (0, -3, "quick", 2.5, True):
+        with pytest.raises(ValueError, match="commit_tile"):
+            resolve_commit_tile(bad)
+
+
+def test_commit_batch_commit_tile_bit_exact(rng):
+    """The commit_tile knob through the commit_batch dispatch seam: every
+    tile commits the identical graph; invalid knobs fail eagerly."""
+    from repro.core.build import commit_batch
+    from repro.core.graph import empty_graph
+
+    items = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+    norms = jnp.linalg.norm(items, axis=-1)
+    base = empty_graph(items, 4)
+    bids = jnp.arange(32, dtype=jnp.int32)
+    nbr = jnp.asarray(rng.integers(-1, 32, (32, 4)).astype(np.int32))
+    sc = jnp.asarray(rng.normal(size=(32, 4)).astype(np.float32))
+    ref = commit_batch(base, bids, nbr, sc, norms)
+    for tile in (1, 3, 8, "auto"):
+        pal = commit_batch(
+            base, bids, nbr, sc, norms, commit_backend="pallas",
+            commit_tile=tile,
+        )
+        assert np.array_equal(np.asarray(ref.adj), np.asarray(pal.adj)), tile
+    with pytest.raises(ValueError, match="commit_tile"):
+        commit_batch(base, bids, nbr, sc, norms, commit_tile=0)
 
 
 def test_commit_batch_pallas_backend_bit_exact(rng):
