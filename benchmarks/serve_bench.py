@@ -1,0 +1,139 @@
+"""Serving-loop benchmark: p50/p99 latency, QPS, recall@10, batch occupancy
+and recompile counts under an open-loop Poisson load through the
+continuous-batching loop (launch/serve_loop.py) — the multi-user numbers the
+one-shot serve.py CLI cannot produce (row schema: docs/BENCHMARKS.md).
+
+Default (and CI) mode runs in VIRTUAL time: the loop advances an injected
+VirtualClock by a fixed analytic LinearServiceModel per dispatch, so every
+latency column is a deterministic property of (trace, ladder, model) — the
+same rows on every machine, no wall-clock flakiness.  The schedule and
+result content are real (every dispatch runs the actual compiled walk and
+recall is measured on the returned ids); only the time axis is simulated.
+``--wall`` swaps in the WallClock for a measured-latency run on the local
+machine (numbers then only comparable to same-machine wall rows).
+
+  PYTHONPATH=src:. python benchmarks/serve_bench.py
+  PYTHONPATH=src:. python benchmarks/serve_bench.py --quick      # CI-sized
+  REPRO_BENCH_QUICK=1 ...                                        # same
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def serve_rows(
+    profile: str = "word_like",
+    *,
+    quick: bool = True,
+    index_kind: str = "ipnsw",
+    rate_qps: float | None = None,
+    n_requests: int | None = None,
+    wall: bool = False,
+    seed: int = 0,
+) -> list:
+    """One ``bench=serve`` row per (profile, rate): build the index, run the
+    Poisson trace through the loop, reduce the responses.  Self-sized like
+    build_bench.phase_split_rows — independent of REPRO_BENCH_QUICK's
+    import-time sizing so the bench-smoke test can call it directly."""
+    import numpy as np
+    import jax.numpy as jnp
+    from benchmarks import common
+    from repro.core import exact_topk, recall_at_k
+    from repro.data import mips_dataset, mips_queries
+    from repro.launch.serve_loop import (
+        BucketLadder,
+        LinearServiceModel,
+        ServeLoop,
+        VirtualClock,
+        WallClock,
+        poisson_trace,
+    )
+
+    n, d = (2000, 24) if quick else (20000, 48)
+    n_requests = n_requests if n_requests is not None else (96 if quick else 2000)
+    rate_qps = rate_qps if rate_qps is not None else (500.0 if quick else 2000.0)
+    ladder = BucketLadder(batches=(8, 32), efs=(16, 32, 64))
+    model = LinearServiceModel()
+    k = common.K
+
+    p = dict(common.PROFILES[profile])
+    p.pop("n_mult", None)
+    items = mips_dataset(n, d, **p)
+    queries = mips_queries(n_requests, d, seed=100 + seed)
+    _, gt = exact_topk(jnp.asarray(queries), jnp.asarray(items), k=k)
+    gt = np.asarray(gt)
+    maker = common.ipnsw_plus_index if index_kind == "ipnsw_plus" \
+        else common.ipnsw_index
+    index = maker(f"serve_{profile}_{n}", items)
+
+    trace = poisson_trace(
+        queries, rate_qps=rate_qps, seed=seed, ef=64,
+        classes=("interactive", "standard", "relaxed"),
+    )
+    clock = WallClock() if wall else VirtualClock()
+    loop = ServeLoop(index, ladder=ladder, clock=clock, k=k,
+                     service_model=model)
+    stats = loop.run(trace)
+
+    by_rid = sorted(stats.responses, key=lambda r: r.rid)
+    recall = recall_at_k(np.stack([r.ids for r in by_rid]), gt)
+    s = stats.summary()
+    return [{
+        "bench": "serve",
+        "profile": profile,
+        "index": index_kind,
+        "clock": "wall" if wall else "virtual",
+        "n": n,
+        "dim": d,
+        "ladder": "/".join(f"{b.batch}x{b.ef}" for b in ladder.buckets()),
+        "rate_qps": rate_qps,
+        "n_requests": n_requests,
+        "served": s["served"],
+        "batches": s["batches"],
+        "p50_ms": round(s["p50_ms"], 4),
+        "p99_ms": round(s["p99_ms"], 4),
+        "qps": round(s["qps"], 2),
+        "recall_at_10": round(float(recall), 4),
+        "occupancy": round(s["occupancy"], 4),
+        "deadline_miss_frac": round(s["deadline_miss_frac"], 4),
+        "recompiles_warmup": s["recompiles_warmup"],
+        "recompiles_steady": s["recompiles_steady"],
+    }]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (same as REPRO_BENCH_QUICK=1)")
+    ap.add_argument("--profiles", nargs="*", default=None,
+                    help="benchmarks.common.PROFILES names "
+                         "(default: music_like word_like)")
+    ap.add_argument("--index", default="ipnsw",
+                    choices=["ipnsw", "ipnsw_plus"])
+    ap.add_argument("--rate", type=float, default=None,
+                    help="Poisson arrival rate in QPS")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--wall", action="store_true",
+                    help="measure real latencies on a WallClock instead of "
+                         "the deterministic virtual run")
+    args = ap.parse_args()
+    if args.quick:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+
+    from benchmarks.common import QUICK, emit
+
+    quick = args.quick or QUICK
+    profiles = args.profiles or ["music_like", "word_like"]
+    header = True
+    for profile in profiles:
+        rows = serve_rows(
+            profile, quick=quick, index_kind=args.index,
+            rate_qps=args.rate, n_requests=args.requests, wall=args.wall,
+        )
+        emit(rows, header=header)
+        header = False
+
+
+if __name__ == "__main__":
+    main()

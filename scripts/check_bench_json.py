@@ -1,50 +1,115 @@
 #!/usr/bin/env python
 """Benchmark-smoke JSON gate (CI step).
 
-Fails the benchmark-smoke step when the quick-mode build_bench JSON is
-missing the per-tile ``build_phase`` rows the tiled commit grid emits — the
-observability contract of DESIGN.md §7 / docs/BENCHMARKS.md: at least one
-pallas row with ``commit_tile > 1`` (the reclaiming layout) and one with
-``commit_tile == 1`` (the untiled baseline), every row carrying the
-``grid_steps`` / ``pad_step_frac`` columns.
+Validates whichever known row families a quick-mode REPRO_BENCH_JSON file
+carries (row schemas: docs/BENCHMARKS.md), failing the step when a family's
+observability contract is broken:
+
+  build_phase — the tiled commit grid's contract (DESIGN.md §7): at least
+      one pallas row with ``commit_tile > 1`` (the reclaiming layout) and
+      one with ``commit_tile == 1`` (the untiled baseline), every row
+      carrying the ``grid_steps`` / ``pad_step_frac`` columns.
+  serve — the continuous-batching loop's contract (launch/serve_loop.py):
+      every row carries the p50/p99/QPS/recall/occupancy/recompile columns,
+      serves every request (the loop never rejects), and reports ZERO
+      steady-state recompiles — a bucket-ladder regression fails CI here.
+
+A file with none of the known families fails outright.
 
   python scripts/check_bench_json.py bench-artifacts/build_bench.json
+  python scripts/check_bench_json.py bench-artifacts/serve_bench.json
 """
 from __future__ import annotations
 
 import json
 import sys
 
-REQUIRED_COLS = {
+PHASE_COLS = {
     "commit_backend", "commit_tile", "find_s", "commit_s", "commit_share",
     "grid_steps", "pad_step_frac",
+}
+
+SERVE_COLS = {
+    "profile", "clock", "rate_qps", "n_requests", "served", "p50_ms",
+    "p99_ms", "qps", "recall_at_10", "occupancy", "deadline_miss_frac",
+    "recompiles_warmup", "recompiles_steady",
+}
+
+
+def _missing_cols(rows: list, required: set) -> list:
+    return [sorted(required - set(r)) for r in rows if required - set(r)]
+
+
+def check_build_phase(rows: list) -> list:
+    errors = []
+    missing = _missing_cols(rows, PHASE_COLS)
+    if missing:
+        errors.append(f"build_phase rows missing columns: {missing[0]}")
+        return errors
+    tiles = sorted(
+        {int(r["commit_tile"]) for r in rows if r["commit_backend"] == "pallas"}
+    )
+    if 1 not in tiles or not any(t > 1 for t in tiles):
+        errors.append(
+            "need pallas build_phase rows for commit_tile=1 AND a tile > 1, "
+            f"got tiles={tiles}"
+        )
+    return errors
+
+
+def check_serve(rows: list) -> list:
+    errors = []
+    missing = _missing_cols(rows, SERVE_COLS)
+    if missing:
+        errors.append(f"serve rows missing columns: {missing[0]}")
+        return errors
+    for r in rows:
+        tag = f"serve[{r.get('profile')},{r.get('clock')}]"
+        if int(r["recompiles_steady"]) != 0:
+            errors.append(
+                f"{tag}: {r['recompiles_steady']} steady-state recompiles — "
+                "the bucket ladder is no longer compile-once"
+            )
+        if int(r["served"]) != int(r["n_requests"]):
+            errors.append(
+                f"{tag}: served {r['served']} of {r['n_requests']} requests "
+                "— the loop must degrade, never reject"
+            )
+        if not 0.0 < float(r["recall_at_10"]) <= 1.0:
+            errors.append(f"{tag}: implausible recall {r['recall_at_10']}")
+        if not 0.0 < float(r["occupancy"]) <= 1.0:
+            errors.append(f"{tag}: implausible occupancy {r['occupancy']}")
+        if float(r["p50_ms"]) > float(r["p99_ms"]):
+            errors.append(f"{tag}: p50 {r['p50_ms']} > p99 {r['p99_ms']}")
+    return errors
+
+
+FAMILIES = {
+    "build_phase": check_build_phase,
+    "serve": check_serve,
 }
 
 
 def main(path: str) -> int:
     with open(path) as f:
         rows = json.load(f)
-    phase = [r for r in rows if r.get("bench") == "build_phase"]
-    if not phase:
-        print(f"[check_bench_json] {path}: no build_phase rows at all")
+    checked = []
+    errors = []
+    for family, check in FAMILIES.items():
+        fam_rows = [r for r in rows if r.get("bench") == family]
+        if not fam_rows:
+            continue
+        checked.append(f"{family}({len(fam_rows)})")
+        errors.extend(check(fam_rows))
+    if not checked:
+        print(f"[check_bench_json] {path}: no known row families "
+              f"(expected one of {sorted(FAMILIES)})")
         return 1
-    missing = [sorted(REQUIRED_COLS - set(r)) for r in phase if REQUIRED_COLS - set(r)]
-    if missing:
-        print(f"[check_bench_json] build_phase rows missing columns: {missing[0]}")
+    for e in errors:
+        print(f"[check_bench_json] {e}")
+    if errors:
         return 1
-    tiles = sorted(
-        {int(r["commit_tile"]) for r in phase if r["commit_backend"] == "pallas"}
-    )
-    if 1 not in tiles or not any(t > 1 for t in tiles):
-        print(
-            "[check_bench_json] need pallas build_phase rows for commit_tile"
-            f"=1 AND a tile > 1, got tiles={tiles}"
-        )
-        return 1
-    print(
-        f"[check_bench_json] ok: {len(phase)} build_phase rows, "
-        f"pallas tiles={tiles}"
-    )
+    print(f"[check_bench_json] ok: {', '.join(checked)} rows validated")
     return 0
 
 

@@ -27,6 +27,7 @@ def _search(
     graph: GraphIndex,
     queries,
     store: Optional[ItemStore] = None,
+    valid=None,
     *,
     pool_size: int,
     max_steps: int,
@@ -38,7 +39,7 @@ def _search(
     init = jnp.broadcast_to(graph.entry[None, None], (b, 1)).astype(jnp.int32)
     return beam_search(
         graph, queries, init, pool_size=pool_size, max_steps=max_steps, k=k,
-        backend=backend, storage=storage, store=store,
+        backend=backend, storage=storage, store=store, valid=valid,
     )
 
 
@@ -109,12 +110,16 @@ class IpNSW:
         max_steps: Optional[int] = None,
         backend: Optional[str] = None,
         storage: Optional[str] = None,
+        valid: Optional[jax.Array] = None,
     ) -> SearchResult:
+        """``valid`` is the [B] bucket-padding mask (search.beam_search):
+        pad rows return ids=-1 at zero eval cost, live rows are bit-identical
+        to an unpadded call — the serving loop's fixed-shape entry point."""
         assert self.graph is not None, "call build() first"
         steps = max_steps if max_steps is not None else 2 * ef
         st = storage if storage is not None else self.storage
         return _search(
-            self.graph, queries, self._resolve_store(st),
+            self.graph, queries, self._resolve_store(st), valid,
             pool_size=max(ef, k), max_steps=steps, k=k,
             backend=backend if backend is not None else self.backend,
             storage=st,

@@ -80,6 +80,7 @@ def _search_plus(
     queries: jax.Array,
     ang_store: Optional[ItemStore] = None,
     ip_store: Optional[ItemStore] = None,
+    valid: Optional[jax.Array] = None,
     *,
     k: int,
     ef: int,
@@ -109,6 +110,7 @@ def _search_plus(
         backend=backend,
         storage=storage,
         store=ang_store,
+        valid=valid,
     )
     seeds = _seed_from_angular(ip_graph.adj, ang.ids)
     ip = beam_search(
@@ -121,6 +123,7 @@ def _search_plus(
         backend=backend,
         storage=storage,
         store=ip_store,
+        valid=valid,
     )
     return PlusResult(
         ids=ip.ids,
@@ -305,7 +308,11 @@ class IpNSWPlus:
         max_steps: Optional[int] = None,
         backend: Optional[str] = None,
         storage: Optional[str] = None,
+        valid: Optional[jax.Array] = None,
     ) -> PlusResult:
+        """``valid`` is the [B] bucket-padding mask (search.beam_search),
+        applied to BOTH walks: pad rows skip the angular stage, seed nothing,
+        and return ids=-1 — the serving loop's fixed-shape entry point."""
         assert self.ip_graph is not None, "call build() first"
         ang_ef = ang_ef if ang_ef is not None else self.ang_ef
         k_ang = k_angular if k_angular is not None else self.k_angular
@@ -322,6 +329,7 @@ class IpNSWPlus:
             queries,
             ang_store,
             ip_store,
+            valid,
             k=k,
             ef=ef,
             ang_ef=ang_ef,

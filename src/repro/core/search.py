@@ -181,6 +181,7 @@ def beam_search(
     interpret: Optional[bool] = None,
     storage: str = "f32",
     store: Optional[ItemStore] = None,
+    valid: Optional[jax.Array] = None,
 ) -> SearchResult:
     """Run the batched walk.
 
@@ -196,6 +197,16 @@ def beam_search(
               not supplied — index classes pass their cached store) and
               re-scores the final pool exactly in fp32 before the top-k cut,
               so returned scores are always exact inner products.
+    valid:    optional [B] bool — the bucket-padding mask the serving loop
+              (launch/serve_loop.py) uses to run a partial batch inside a
+              fixed-size compiled program.  Pad rows (``valid=False``) are
+              born done with an empty pool: they take no walk steps, spend
+              zero evals, and return ids=-1 / scores=-inf.  Because every
+              per-step operation is row-wise and done rows are frozen by the
+              step backends, a live row's result is bit-identical to the
+              same query in a batch of any other size (the
+              padding-equivalence pin in tests/test_serve_loop.py).  Pad
+              query rows are ignored but must hold finite values.
     """
     # Validate eagerly, before seeding does any work: a typo'd backend must
     # not survive until make_step_fn resolves it mid-trace (by which point a
@@ -229,6 +240,11 @@ def beam_search(
     V = S + max_steps * M  # visited capacity — exact, no clipping needed
 
     init_ids = _dedup_ids(init_ids)
+    if valid is not None:
+        # Pad rows lose their seeds entirely: all-(-1) seeds give an
+        # all-checked, -inf pool below, and done=True keeps every step
+        # backend from ever advancing them.
+        init_ids = jnp.where(valid[:, None].astype(bool), init_ids, -1)
     valid0 = init_ids >= 0
     scores0 = jnp.where(
         valid0, walk_score_fn(queries, items, init_ids), NEG_INF
@@ -255,7 +271,8 @@ def beam_search(
         pool_checked=pool_checked,
         visited=visited,
         evals=evals0,
-        done=jnp.zeros((B,), bool),
+        done=(jnp.zeros((B,), bool) if valid is None
+              else ~valid.astype(bool)),
         step=jnp.zeros((), jnp.int32),
     )
 

@@ -9,6 +9,18 @@ stage (--index ipnsw_plus), the ip-NSW baseline, or the exact scan.
 With --shards > 1, items are row-sharded into shard-local sub-indexes and
 queries fan out via shard_map (requires that many local devices; use
 XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU).
+
+``--loop`` switches from the one-shot timed batch to the continuous-batching
+serving loop (launch/serve_loop.py): a Poisson request trace is scheduled
+through the deadline-aware bucket ladder and the report gains p50/p99
+latency, QPS, occupancy and the recompile split (warmup vs steady state —
+steady-state recompiles mean the bucket ladder regressed and must be zero).
+``--clock virtual`` (default) runs deterministic simulated time;
+``--clock wall`` serves in real time.  Not combinable with --shards > 1.
+
+Every mode reports the process-wide XLA compile-event count
+(serve_loop.xla_compile_events, a jax.monitoring hook) so compile creep is
+visible even outside loop mode.
 """
 from __future__ import annotations
 
@@ -22,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import IpNSW, IpNSWPlus, exact_topk, recall_at_k
 from repro.data import mips_dataset, mips_queries
+from repro.launch import serve_loop as sl
 
 
 def main():
@@ -54,12 +67,32 @@ def main():
                     help="item store the walks stream "
                          "(storage.STORAGE_BACKENDS; int8 = quantized walk "
                          "+ exact fp32 rerank, DESIGN.md §8)")
+    ap.add_argument("--loop", action="store_true",
+                    help="continuous-batching serving loop instead of the "
+                         "one-shot timed batch (launch/serve_loop.py)")
+    ap.add_argument("--clock", default="virtual",
+                    choices=["virtual", "wall"],
+                    help="loop mode time source: deterministic simulated "
+                         "time, or real time")
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="loop mode Poisson arrival rate (QPS)")
+    ap.add_argument("--requests", type=int, default=256,
+                    help="loop mode trace length")
     args = ap.parse_args()
+
+    compile_events0 = sl.xla_compile_events()
 
     items = jnp.asarray(mips_dataset(args.n_items, args.dim, args.profile, seed=0))
     queries = jnp.asarray(mips_queries(args.batch, args.dim, seed=1))
     _, gt = exact_topk(queries, items, k=args.k)
     gt = np.asarray(gt)
+
+    if args.loop:
+        if args.shards > 1 or args.index == "bruteforce":
+            raise SystemExit("--loop serves ipnsw/ipnsw_plus on one device; "
+                             "drop --shards / pick a graph index")
+        _run_loop(args, items, compile_events0)
+        return
 
     if args.shards > 1:
         from repro.core.distributed import build_sharded, sharded_search
@@ -121,7 +154,60 @@ def main():
           f"storage={args.storage} "
           f"N={args.n_items} B={args.batch} ef={args.ef}: "
           f"recall@{args.k}={rec:.3f} evals/q={ev:.0f} "
-          f"({dt/args.batch*1e3:.2f} ms/query batch-amortized)")
+          f"({dt/args.batch*1e3:.2f} ms/query batch-amortized) "
+          f"xla_compiles={sl.xla_compile_events() - compile_events0}")
+
+
+def _build_ladder(batch: int, ef: int) -> "sl.BucketLadder":
+    """A small ladder bracketing the CLI's (batch, ef): quarter/full batch
+    rungs and quarter/half/full ef rungs (deduped, floored at 8)."""
+    batches = tuple(sorted({max(1, batch // 4), batch}))
+    efs = tuple(sorted({max(8, ef // 4), max(8, ef // 2), ef}))
+    return sl.BucketLadder(batches=batches, efs=efs)
+
+
+def _run_loop(args, items, compile_events0: int) -> None:
+    cls = IpNSWPlus if args.index == "ipnsw_plus" else IpNSW
+    index = cls(max_degree=16, ef_construction=32, insert_batch=512,
+                backend=args.backend,
+                build_backend=args.build_backend,
+                commit_backend=args.commit_backend,
+                commit_tile=args.commit_tile,
+                storage=args.storage).build(items)
+
+    queries = mips_queries(args.requests, args.dim, seed=1)
+    _, gt = exact_topk(jnp.asarray(queries), items, k=args.k)
+    gt = np.asarray(gt)
+
+    ladder = _build_ladder(args.batch, args.ef)
+    trace = sl.poisson_trace(
+        queries, rate_qps=args.rate, seed=2, ef=args.ef,
+        classes=("interactive", "standard", "relaxed"),
+    )
+    clock = sl.VirtualClock() if args.clock == "virtual" else sl.WallClock()
+    loop = sl.ServeLoop(index, ladder=ladder, clock=clock, k=args.k,
+                        service_model=sl.LinearServiceModel())
+    stats = loop.run(trace)
+
+    by_rid = sorted(stats.responses, key=lambda r: r.rid)
+    rec = recall_at_k(np.stack([r.ids for r in by_rid]), gt)
+    s = stats.summary()
+    print(f"[serve --loop] index={args.index} storage={args.storage} "
+          f"clock={args.clock} N={args.n_items} rate={args.rate:.0f}qps "
+          f"requests={args.requests} "
+          f"ladder={'/'.join(f'{b.batch}x{b.ef}' for b in ladder.buckets())}: "
+          f"recall@{args.k}={rec:.3f} p50={s['p50_ms']:.2f}ms "
+          f"p99={s['p99_ms']:.2f}ms qps={s['qps']:.0f} "
+          f"occupancy={s['occupancy']:.2f} "
+          f"miss_frac={s['deadline_miss_frac']:.3f} "
+          f"recompiles(warmup/steady)={s['recompiles_warmup']}"
+          f"/{s['recompiles_steady']} "
+          f"xla_compiles={sl.xla_compile_events() - compile_events0}")
+    if s["recompiles_steady"]:
+        raise SystemExit(
+            f"bucket-ladder regression: {s['recompiles_steady']} "
+            "steady-state recompiles (expected 0)"
+        )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,613 @@
+"""Continuous-batching serving loop — the multi-user layer over the index.
+
+Everything below ``serve.py``'s one-shot CLI so far optimizes a single
+pre-formed batch; this module turns the repo into a server.  The moving
+parts, in dataflow order:
+
+  request queue  — ``Request``s carry a query, an arrival time, a deadline
+                   and an ``ef`` preference (the paper's per-request
+                   recall/latency dial, fig 8c).  Arrivals come from any
+                   iterable; ``poisson_trace`` builds the open-loop Poisson
+                   load the benchmarks use.
+  scheduler      — coalesces queued requests into dynamic batches.
+                   Admission is deadline-ordered (earliest deadline first,
+                   which is FIFO within a deadline class since every member
+                   of a class shares one budget); the batch is padded up to
+                   a ``BucketLadder`` shape and served at the LARGEST ladder
+                   ``ef`` that (a) no batched request asked to exceed and
+                   (b) the ``ServiceModel`` predicts still meets the
+                   tightest deadline — degrading to a smaller ``ef`` rather
+                   than rejecting, and at the ladder floor (late) when
+                   nothing fits.  Requests are never rejected.
+  bucket ladder  — the small fixed set of (batch, ef) shapes.  Each bucket
+                   is ONE persistent jitted ``beam_search`` program
+                   (``BucketExecutor``): fixed shapes + static knobs mean
+                   compile-once, zero steady-state recompiles; the padded
+                   query buffer is donated to XLA where the backend supports
+                   donation.  Pad rows ride the ``valid=`` mask of
+                   ``core.search.beam_search`` (born done, ids=-1, zero
+                   evals) so a live row's result is bit-identical to a solo
+                   search — the padding-equivalence pin.
+  clock          — every time read goes through an injectable clock.
+                   ``VirtualClock`` + a deterministic ``ServiceModel`` make
+                   the whole loop a pure function of the arrival trace
+                   (bit-identical replay, no wall-clock flakiness);
+                   ``WallClock`` serves real traffic.  ServeLoop itself
+                   never imports wall time — tests pin that.
+  response demux — each request gets back exactly its row of the bucket
+                   result, stamped with dispatch/finish times and the ef it
+                   was actually served at.
+
+Observability: ``BucketExecutor`` counts compile-cache misses on the
+bucketed entry point (bucket shapes are fixed, so a program-build per bucket
+is exactly one XLA compile), split into warmup vs steady-state — a bucket
+ladder regression shows up as ``recompiles_steady > 0``.  A module-level
+``jax.monitoring`` listener additionally counts raw XLA compile events as a
+cross-check (``xla_compile_events()``), which ``serve.py`` reports.
+
+See docs/ARCHITECTURE.md ("The serving layer") and benchmarks/serve_bench.py
+for the p50/p99/QPS/occupancy rows built on top of this loop.
+"""
+from __future__ import annotations
+
+import functools
+import time  # WallClock only — the loop itself never reads wall time
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.ipnsw import IpNSW
+from repro.core.ipnsw_plus import IpNSWPlus
+from repro.core.search import beam_search
+
+# --------------------------------------------------------------------------
+# XLA compile-event cross-check (jax.monitoring hook)
+# --------------------------------------------------------------------------
+
+_COMPILE_EVENTS = {"n": 0}
+
+
+def _count_compile_event(event: str, *args, **kwargs) -> None:
+    if "compile" in event:
+        _COMPILE_EVENTS["n"] += 1
+
+
+try:  # pragma: no cover - listener registration is environment-dependent
+    from jax import monitoring as _jax_monitoring
+
+    _jax_monitoring.register_event_listener(_count_compile_event)
+    _jax_monitoring.register_event_duration_secs_listener(_count_compile_event)
+except Exception:  # monitoring API absent/changed: executor counts remain
+    pass
+
+
+def xla_compile_events() -> int:
+    """Raw XLA compile events observed process-wide since import (a
+    cross-check for the executor's per-bucket cache-miss count)."""
+    return _COMPILE_EVENTS["n"]
+
+
+# --------------------------------------------------------------------------
+# Clocks
+# --------------------------------------------------------------------------
+
+
+class VirtualClock:
+    """Simulated time: advances only when the loop sleeps.  With a
+    deterministic ServiceModel this makes a serve run a pure function of the
+    arrival trace — the fake-clock test harness."""
+
+    virtual = True
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def now(self) -> float:
+        return self._t
+
+    def sleep_until(self, t: float) -> None:
+        self._t = max(self._t, float(t))
+
+
+class WallClock:
+    """Real time, zeroed at construction so traces can start at t=0."""
+
+    virtual = False
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def sleep_until(self, t: float) -> None:
+        dt = t - self.now()
+        if dt > 0:
+            time.sleep(dt)
+
+
+# --------------------------------------------------------------------------
+# Requests / responses / deadline classes
+# --------------------------------------------------------------------------
+
+# Default per-class latency budgets (seconds past arrival).  Classes are
+# names over budgets, nothing more: admission works on the absolute
+# ``deadline_t`` each request carries.
+DEADLINE_CLASSES: Dict[str, float] = {
+    "interactive": 0.020,
+    "standard": 0.100,
+    "relaxed": 1.000,
+}
+
+
+@dataclass(frozen=True)
+class Request:
+    rid: int
+    query: np.ndarray       # [d] fp32
+    arrival_t: float
+    deadline_t: float       # absolute time the response should exist by
+    ef: int                 # requested recall dial (served ef never exceeds)
+    klass: str = "standard"
+
+
+@dataclass(frozen=True)
+class Response:
+    rid: int
+    ids: np.ndarray         # [k] int32, -1 padded
+    scores: np.ndarray      # [k] fp32
+    ef_request: int
+    ef_served: int
+    bucket: "Bucket"
+    arrival_t: float
+    dispatch_t: float
+    finish_t: float
+    deadline_t: float
+    deadline_met: bool
+    degraded: bool          # served below the preferred ladder ef
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_t - self.arrival_t
+
+
+@dataclass(frozen=True)
+class BatchRecord:
+    seq: int
+    dispatch_t: float
+    finish_t: float
+    bucket: "Bucket"
+    rids: Tuple[int, ...]
+    ef_served: int
+
+    @property
+    def occupancy(self) -> float:
+        return len(self.rids) / self.bucket.batch
+
+
+# --------------------------------------------------------------------------
+# Bucket ladder
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Bucket:
+    batch: int
+    ef: int
+
+
+@dataclass(frozen=True)
+class BucketLadder:
+    """The fixed (batch, ef) shapes the loop is allowed to run — one
+    compiled program each.  Both axes must be strictly ascending."""
+
+    batches: Tuple[int, ...] = (4, 16)
+    efs: Tuple[int, ...] = (16, 32, 64)
+
+    def __post_init__(self):
+        for name, axis in (("batches", self.batches), ("efs", self.efs)):
+            if not axis or any(v <= 0 for v in axis):
+                raise ValueError(f"ladder {name} must be positive: {axis}")
+            if any(b >= a for a, b in zip(axis[1:], axis)):
+                raise ValueError(f"ladder {name} must be strictly "
+                                 f"ascending: {axis}")
+
+    @property
+    def max_batch(self) -> int:
+        return self.batches[-1]
+
+    def buckets(self) -> List[Bucket]:
+        return [Bucket(b, e) for b in self.batches for e in self.efs]
+
+    def batch_for(self, n: int) -> int:
+        """Smallest ladder batch that holds n requests (n <= max_batch)."""
+        for b in self.batches:
+            if b >= n:
+                return b
+        raise ValueError(f"batch of {n} exceeds ladder max {self.max_batch}")
+
+    def ef_pref(self, requested_ef: int) -> int:
+        """Largest ladder ef not exceeding the request's dial (ladder floor
+        when the request asks below every rung)."""
+        fitting = [e for e in self.efs if e <= requested_ef]
+        return fitting[-1] if fitting else self.efs[0]
+
+
+# --------------------------------------------------------------------------
+# Service model
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LinearServiceModel:
+    """Deterministic bucket-cost prediction the scheduler plans with (and
+    the amount a VirtualClock advances per dispatch).  Pure function of the
+    bucket, so virtual-time runs replay bit-identically.  Constants are a
+    knob, not a measurement — calibrate per deployment, or regress from
+    serve_bench wall rows."""
+
+    base_s: float = 1e-3          # per-dispatch overhead
+    per_row_s: float = 1e-5       # per padded batch row
+    per_ef_s: float = 0.0         # per ef unit, batch-independent
+    per_ef_row_s: float = 1e-6    # per (row x ef) unit — the walk itself
+
+    def service_s(self, bucket: Bucket) -> float:
+        return (self.base_s
+                + self.per_row_s * bucket.batch
+                + self.per_ef_s * bucket.ef
+                + self.per_ef_row_s * bucket.batch * bucket.ef)
+
+
+# --------------------------------------------------------------------------
+# Bucket executor — persistent jitted programs, recompile accounting
+# --------------------------------------------------------------------------
+
+
+def _ipnsw_bucket(graph, store, queries, valid, *, k, ef, backend, storage):
+    b = queries.shape[0]
+    init = jnp.broadcast_to(graph.entry[None, None], (b, 1)).astype(jnp.int32)
+    r = beam_search(
+        graph, queries, init, pool_size=max(ef, k), max_steps=2 * ef, k=k,
+        backend=backend, storage=storage, store=store, valid=valid,
+    )
+    return r.ids, r.scores, r.evals
+
+
+def _plus_bucket(ang_graph, ip_graph, ang_store, ip_store, queries, valid,
+                 *, k, ef, ang_ef, k_angular, backend, storage):
+    from repro.core.ipnsw_plus import _search_plus
+
+    r = _search_plus(
+        ang_graph, ip_graph, queries, ang_store, ip_store, valid,
+        k=k, ef=ef, ang_ef=ang_ef, k_angular=k_angular,
+        max_steps=2 * ef, ang_max_steps=2 * max(ang_ef, k_angular),
+        backend=backend, storage=storage,
+    )
+    return r.ids, r.scores, r.evals
+
+
+class BucketExecutor:
+    """One persistent jitted walk program per ladder bucket.
+
+    A bucket fixes every shape (padded batch, pool size, step bound) and
+    every static knob, so the program compiles exactly once; the executor's
+    program-cache miss count IS the recompile count of the bucketed entry
+    point, split into warmup (before ``warmup()`` returns) and steady-state
+    (anything after — a ladder regression).  The padded query buffer is
+    donated to XLA on backends that support input donation (TPU/GPU), which
+    lets the runtime reuse it as scratch across dispatches.
+    """
+
+    def __init__(self, index, ladder: BucketLadder, *, k: int = 10,
+                 donate: Optional[bool] = None):
+        if not isinstance(index, (IpNSW, IpNSWPlus)):
+            raise TypeError(
+                f"BucketExecutor serves IpNSW or IpNSWPlus, got {type(index)}"
+            )
+        self.index = index
+        self.ladder = ladder
+        self.k = k
+        if donate is None:  # CPU jax logs 'donation not implemented' warnings
+            donate = jax.default_backend() in ("tpu", "gpu")
+        self.donate = donate
+        self._programs: Dict[Bucket, tuple] = {}
+        self.compile_log: List[Tuple[Bucket, str]] = []
+        self._steady = False
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def recompiles_warmup(self) -> int:
+        return sum(1 for _, phase in self.compile_log if phase == "warmup")
+
+    @property
+    def recompiles_steady(self) -> int:
+        return sum(1 for _, phase in self.compile_log if phase == "steady")
+
+    @property
+    def warmed(self) -> bool:
+        return self._steady
+
+    # -- programs ----------------------------------------------------------
+
+    def dim(self) -> int:
+        g = self.index.ip_graph if isinstance(self.index, IpNSWPlus) \
+            else self.index.graph
+        assert g is not None, "index must be built before serving"
+        return g.items.shape[1]
+
+    def _build_program(self, bucket: Bucket):
+        idx = self.index
+        if isinstance(idx, IpNSWPlus):
+            if idx.storage == "int8" and idx.ip_store is None:
+                idx._make_stores(idx.storage)
+            const = (
+                idx.ang_graph, idx.ip_graph,
+                idx.ang_store if idx.storage == "int8" else None,
+                idx.ip_store if idx.storage == "int8" else None,
+            )
+            fn = functools.partial(
+                _plus_bucket, k=self.k, ef=bucket.ef, ang_ef=idx.ang_ef,
+                k_angular=idx.k_angular, backend=idx.backend,
+                storage=idx.storage,
+            )
+            query_argnum = 4
+        else:
+            const = (idx.graph, idx._resolve_store(idx.storage))
+            fn = functools.partial(
+                _ipnsw_bucket, k=self.k, ef=bucket.ef, backend=idx.backend,
+                storage=idx.storage,
+            )
+            query_argnum = 2
+        jit_kwargs = {"donate_argnums": (query_argnum,)} if self.donate else {}
+        return jax.jit(fn, **jit_kwargs), const
+
+    def warmup(self) -> None:
+        """Compile every ladder bucket on an all-pad batch (the while_loop
+        body never runs, so warmup is one trace+compile per bucket and zero
+        walk work); everything after counts as steady state."""
+        d = self.dim()
+        for bucket in self.ladder.buckets():
+            self.run(bucket,
+                     np.zeros((bucket.batch, d), np.float32),
+                     np.zeros((bucket.batch,), bool))
+        self._steady = True
+
+    def run(self, bucket: Bucket, queries: np.ndarray, valid: np.ndarray):
+        """Dispatch one padded bucket; returns (ids, scores, evals) as
+        host arrays.  ``queries`` [bucket.batch, d] fp32 is consumed (it may
+        be donated) — callers build a fresh buffer per dispatch."""
+        prog = self._programs.get(bucket)
+        if prog is None:
+            prog = self._build_program(bucket)
+            self._programs[bucket] = prog
+            self.compile_log.append(
+                (bucket, "steady" if self._steady else "warmup")
+            )
+        fn, const = prog
+        ids, scores, evals = fn(*const, jnp.asarray(queries),
+                                jnp.asarray(valid))
+        return np.asarray(ids), np.asarray(scores), np.asarray(evals)
+
+
+# --------------------------------------------------------------------------
+# The serving loop
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ServeStats:
+    responses: List[Response]
+    batches: List[BatchRecord]
+    recompiles_warmup: int
+    recompiles_steady: int
+
+    def latencies_ms(self) -> np.ndarray:
+        return np.asarray([r.latency_s * 1e3 for r in self.responses])
+
+    def percentile_ms(self, q: float) -> float:
+        lat = self.latencies_ms()
+        return float(np.percentile(lat, q)) if lat.size else 0.0
+
+    def qps(self) -> float:
+        if not self.responses:
+            return 0.0
+        t0 = min(r.arrival_t for r in self.responses)
+        t1 = max(r.finish_t for r in self.responses)
+        return len(self.responses) / max(t1 - t0, 1e-12)
+
+    def occupancy(self) -> float:
+        if not self.batches:
+            return 0.0
+        return float(np.mean([b.occupancy for b in self.batches]))
+
+    def deadline_miss_frac(self) -> float:
+        if not self.responses:
+            return 0.0
+        return float(np.mean([not r.deadline_met for r in self.responses]))
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "served": len(self.responses),
+            "batches": len(self.batches),
+            "p50_ms": self.percentile_ms(50),
+            "p99_ms": self.percentile_ms(99),
+            "qps": self.qps(),
+            "occupancy": self.occupancy(),
+            "deadline_miss_frac": self.deadline_miss_frac(),
+            "recompiles_warmup": self.recompiles_warmup,
+            "recompiles_steady": self.recompiles_steady,
+        }
+
+
+class ServeLoop:
+    """Single-threaded, event-driven continuous-batching loop.
+
+    The loop is deliberately free of threads and wall-time reads: time
+    advances only through ``clock.sleep_until``, and with a VirtualClock the
+    service model supplies each dispatch's duration — so a run is a pure
+    function of (index, ladder, model, trace) and replays bit-identically.
+
+    Scheduling policy (deterministic by construction):
+      * the queue is kept in (deadline_t, arrival_t, rid) order — earliest
+        deadline first, FIFO within a deadline class;
+      * the loop waits for further arrivals only while the queue is smaller
+        than the largest ladder batch AND the head request could still be
+        served at its preferred ef after the wait (its "dispatch-by" point,
+        ``deadline_t - service(max_batch bucket at preferred ef)``);
+      * at dispatch, up to ``max_batch`` head requests form the batch, the
+        batch axis pads up to the smallest fitting ladder rung, and the
+        served ef is the largest rung that no member's dial forbids and the
+        model predicts meets the tightest member deadline — else the next
+        smaller rung (graceful degrade), else the ladder floor (served late,
+        never rejected).
+    """
+
+    def __init__(self, index, *, ladder: Optional[BucketLadder] = None,
+                 clock=None, k: int = 10, service_model=None,
+                 executor: Optional[BucketExecutor] = None):
+        self.ladder = ladder if ladder is not None else BucketLadder()
+        self.clock = clock if clock is not None else VirtualClock()
+        self.service_model = (service_model if service_model is not None
+                              else LinearServiceModel())
+        self.executor = (executor if executor is not None
+                         else BucketExecutor(index, self.ladder, k=k))
+        self.k = self.executor.k
+
+    # -- policy helpers ----------------------------------------------------
+
+    @staticmethod
+    def _order(r: Request):
+        return (r.deadline_t, r.arrival_t, r.rid)
+
+    def _choose_ef(self, batch: Sequence[Request], bucket_batch: int,
+                   now: float) -> Tuple[int, bool]:
+        """Largest ladder ef within every member's dial that fits the
+        tightest deadline; degrade down the ladder, floor as last resort."""
+        pref = self.ladder.ef_pref(min(r.ef for r in batch))
+        slack = min(r.deadline_t for r in batch) - now
+        for ef in reversed([e for e in self.ladder.efs if e <= pref]):
+            if self.service_model.service_s(Bucket(bucket_batch, ef)) <= slack:
+                return ef, ef < pref
+        return self.ladder.efs[0], True
+
+    # -- the loop ----------------------------------------------------------
+
+    def run(self, requests: Iterable[Request]) -> ServeStats:
+        trace = sorted(requests, key=lambda r: (r.arrival_t, r.rid))
+        d = self.executor.dim()
+        for r in trace:
+            if np.asarray(r.query).shape != (d,):
+                raise ValueError(
+                    f"request {r.rid}: query shape {np.asarray(r.query).shape}"
+                    f" != ({d},)"
+                )
+        if not self.executor.warmed:
+            self.executor.warmup()
+
+        pending = deque(trace)
+        queue: List[Request] = []
+        responses: List[Response] = []
+        batches: List[BatchRecord] = []
+        max_b = self.ladder.max_batch
+
+        while pending or queue:
+            now = self.clock.now()
+            while pending and pending[0].arrival_t <= now:
+                queue.append(pending.popleft())
+            if not queue:
+                self.clock.sleep_until(pending[0].arrival_t)
+                continue
+
+            queue.sort(key=self._order)
+            head = queue[0]
+            next_arrival = pending[0].arrival_t if pending else None
+            dispatch_by = head.deadline_t - self.service_model.service_s(
+                Bucket(max_b, self.ladder.ef_pref(head.ef))
+            )
+            if (len(queue) < max_b and next_arrival is not None
+                    and next_arrival <= dispatch_by and now < dispatch_by):
+                # Coalesce: waiting for the next arrival cannot cost the
+                # head its preferred service — sleep to the earlier of the
+                # arrival and the head's dispatch-by point.
+                self.clock.sleep_until(min(next_arrival, dispatch_by))
+                continue
+
+            batch = queue[:max_b]
+            del queue[:len(batch)]
+            bucket_batch = self.ladder.batch_for(len(batch))
+            ef, degraded = self._choose_ef(batch, bucket_batch, now)
+            bucket = Bucket(bucket_batch, ef)
+
+            padded = np.zeros((bucket.batch, d), np.float32)
+            for i, r in enumerate(batch):
+                padded[i] = r.query
+            valid = np.arange(bucket.batch) < len(batch)
+            ids, scores, _ = self.executor.run(bucket, padded, valid)
+
+            if self.clock.virtual:
+                finish = now + self.service_model.service_s(bucket)
+                self.clock.sleep_until(finish)
+            else:
+                finish = self.clock.now()
+
+            for i, r in enumerate(batch):
+                responses.append(Response(
+                    rid=r.rid, ids=ids[i], scores=scores[i],
+                    ef_request=r.ef, ef_served=ef, bucket=bucket,
+                    arrival_t=r.arrival_t, dispatch_t=now, finish_t=finish,
+                    deadline_t=r.deadline_t,
+                    deadline_met=finish <= r.deadline_t,
+                    degraded=degraded,
+                ))
+            batches.append(BatchRecord(
+                seq=len(batches), dispatch_t=now, finish_t=finish,
+                bucket=bucket, rids=tuple(r.rid for r in batch),
+                ef_served=ef,
+            ))
+
+        return ServeStats(
+            responses=responses, batches=batches,
+            recompiles_warmup=self.executor.recompiles_warmup,
+            recompiles_steady=self.executor.recompiles_steady,
+        )
+
+
+# --------------------------------------------------------------------------
+# Arrival sources
+# --------------------------------------------------------------------------
+
+
+def poisson_trace(
+    queries: np.ndarray,
+    *,
+    rate_qps: float,
+    seed: int = 0,
+    ef: int = 64,
+    classes: Sequence[str] = ("standard",),
+    budgets: Optional[Dict[str, float]] = None,
+    start_t: float = 0.0,
+) -> List[Request]:
+    """Open-loop Poisson arrivals: one request per query row, exponential
+    inter-arrival gaps at ``rate_qps``, deadline classes sampled uniformly
+    from ``classes``.  Pure ``numpy.random.default_rng(seed)`` — no wall
+    clock anywhere, so a trace is reproducible byte-for-byte."""
+    budgets = dict(DEADLINE_CLASSES if budgets is None else budgets)
+    q = np.asarray(queries, np.float32)
+    n = q.shape[0]
+    rng = np.random.default_rng(seed)
+    ts = start_t + np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
+    efs = np.broadcast_to(np.asarray(ef, np.int64), (n,))
+    cls = rng.integers(0, len(classes), size=n)
+    out = []
+    for i in range(n):
+        klass = classes[int(cls[i])]
+        out.append(Request(
+            rid=i, query=q[i], arrival_t=float(ts[i]),
+            deadline_t=float(ts[i]) + budgets[klass],
+            ef=int(efs[i]), klass=klass,
+        ))
+    return out

@@ -1,6 +1,8 @@
 """Benchmark-surface smoke: the build_bench phase-split rows must show the
 tiled commit grid actually reclaiming pad steps (the ISSUE-5 acceptance
-knob), and the docs link-check script CI runs must pass on the repo itself.
+knob), the serve_bench rows must carry the serving-loop schema with zero
+steady-state recompiles (the ISSUE-6 acceptance knob), and the docs
+link-check script CI runs must pass on the repo itself.
 
 The bench import needs the repo root on sys.path (tests run with
 PYTHONPATH=src); benchmarks/ is resolved relative to this file so the test
@@ -46,6 +48,41 @@ def test_build_bench_quick_pad_step_frac_drops():
     import numpy as np
     heavy = np.exp(np.random.default_rng(0).normal(size=2000))
     assert resolve_commit_tile("auto", norms=heavy) > 1
+
+
+def test_serve_bench_quick_row_schema_and_zero_steady_recompiles():
+    """The quick serve_bench rows must carry the docs/BENCHMARKS.md serve
+    schema, serve every request, and report ZERO steady-state recompiles
+    (the bucket ladder is compile-once) — and the CI gate script itself
+    must accept them."""
+    import json
+    import tempfile
+
+    from benchmarks.serve_bench import serve_rows
+
+    rows = serve_rows("word_like", quick=True)
+    assert rows and all(r["bench"] == "serve" for r in rows)
+    (row,) = rows
+    assert row["served"] == row["n_requests"]       # degrade, never reject
+    assert row["recompiles_steady"] == 0            # compile-once ladder
+    assert row["recompiles_warmup"] > 0             # ...but it DID compile
+    assert 0.0 < row["occupancy"] <= 1.0
+    assert 0.0 < row["recall_at_10"] <= 1.0
+    assert row["p50_ms"] <= row["p99_ms"]
+    assert row["clock"] == "virtual"                # CI stays deterministic
+
+    # the same rows must pass the CI gate script
+    check = os.path.join(ROOT, "scripts", "check_bench_json.py")
+    with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as f:
+        json.dump(rows, f)
+        path = f.name
+    try:
+        res = subprocess.run(
+            [sys.executable, check, path], capture_output=True, text=True
+        )
+        assert res.returncode == 0, res.stdout + res.stderr
+    finally:
+        os.unlink(path)
 
 
 def test_docs_link_check_passes():

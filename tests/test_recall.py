@@ -101,6 +101,42 @@ def test_ipnsw_plus_recall_floor_lognormal(seed):
     assert recall_at_k(np.asarray(r.ids), _gt("lognormal", seed)) >= FLOORS["lognormal"]
 
 
+@pytest.mark.parametrize("profile", PROFILES)
+def test_served_traffic_recall_matches_direct_floor(profile):
+    """Served-traffic recall floor: a short virtual-time Poisson trace
+    through the continuous-batching loop (launch/serve_loop.py) must match
+    the direct ``beam_search`` floor at the same ef bucket.  Deadlines are
+    generous so every request is served at its requested ef; padding
+    equivalence then makes the served ids identical to the one-shot batch
+    search, so the serving layer can never cost recall."""
+    from repro.launch.serve_loop import (
+        BucketLadder, LinearServiceModel, ServeLoop, VirtualClock,
+        poisson_trace,
+    )
+
+    idx = _ipnsw(profile)
+    q = _queries(202)
+    gt = _gt(profile, 202)
+    trace = poisson_trace(
+        np.asarray(q), rate_qps=2000.0, seed=9, ef=EF,
+        classes=("relaxed",), budgets={"relaxed": 60.0},
+    )
+    loop = ServeLoop(
+        idx, ladder=BucketLadder(batches=(8, 32), efs=(EF // 2, EF)),
+        clock=VirtualClock(), k=K, service_model=LinearServiceModel(),
+    )
+    stats = loop.run(trace)
+    assert len(stats.responses) == q.shape[0]
+    assert all(r.ef_served == EF for r in stats.responses)
+    served_ids = np.stack(
+        [r.ids for r in sorted(stats.responses, key=lambda r: r.rid)]
+    )
+    direct = idx.search(q, k=K, ef=EF)
+    assert np.array_equal(served_ids, np.asarray(direct.ids))
+    assert recall_at_k(served_ids, gt) >= FLOORS[profile]
+    assert stats.recompiles_steady == 0
+
+
 def test_pallas_backend_recall_identical():
     """The fused backend changes speed, never results: same recall, same ids."""
     q = _queries(123)
