@@ -1,0 +1,254 @@
+"""Churn benchmark: recall, health and scheduling behavior of a
+``core.mutation.MutableIndex`` under streaming upserts / tombstone deletes /
+adversarial hub kills, replayed through the continuous-batching serving loop
+(row schema: docs/BENCHMARKS.md, ``bench=churn``).
+
+Three row kinds:
+
+  kind=turnover      — sweep the churn fraction (share of the catalog both
+                       deleted and re-upserted while queries stream).  After
+                       the trace, repair runs to zero relink debt and the
+                       mutated index's recall@10 (against exact MIPS over
+                       the CURRENT live catalog) is compared with a fresh
+                       rebuild of that same catalog — ``recall_delta`` is
+                       the price of mutating in place, the number the CI
+                       gate bounds (scripts/check_bench_json.py: >-0.02,
+                       and ``rejected`` must be 0).
+  kind=relink_sweep  — fixed heavy churn, sweep the per-pass repair budget
+                       from 0 to "everything": shows recall and dead-edge
+                       fraction as a function of how much repair work the
+                       operator buys.
+  kind=hub_kill      — tombstone the highest-in-degree live nodes (the §4
+                       large-norm routing hubs — the adversarial delete for
+                       this graph family), then measure the recovery curve:
+                       recall after the kill and after each incremental
+                       relink slice.
+
+All rows run in virtual time with the deterministic service model, so they
+are a pure function of the seeds — same numbers on every machine.
+
+  PYTHONPATH=src:. python benchmarks/churn_bench.py
+  PYTHONPATH=src:. python benchmarks/churn_bench.py --quick      # CI-sized
+  REPRO_BENCH_QUICK=1 ...                                        # same
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def _exact_live_topk(queries, items, live, k):
+    """Ground truth over the mutated catalog: exact top-k restricted to
+    live slots (slot-id space)."""
+    import numpy as np
+
+    scores = np.asarray(queries, np.float32) @ np.asarray(items, np.float32).T
+    scores = np.where(np.asarray(live, bool)[None, : items.shape[0]],
+                      scores, -np.inf)
+    return np.argsort(-scores, axis=1, kind="stable")[:, :k]
+
+
+def _recall(ids, gt) -> float:
+    import numpy as np
+
+    ids, gt = np.asarray(ids), np.asarray(gt)
+    hits = sum(len(set(ids[i][ids[i] >= 0]) & set(gt[i]))
+               for i in range(len(gt)))
+    return hits / (gt.shape[0] * gt.shape[1])
+
+
+def _mutable(index_kind: str, items, *, capacity):
+    import jax.numpy as jnp
+    from repro.core import IpNSW, IpNSWPlus, MutableIndex
+
+    # No common.py build cache: every scenario mutates its own copy.
+    cls = IpNSWPlus if index_kind == "ipnsw_plus" else IpNSW
+    idx = cls(max_degree=16, ef_construction=32,
+              insert_batch=512).build(jnp.asarray(items))
+    return MutableIndex(idx, capacity=capacity, mutation_batch=32)
+
+
+def _rebuild_floor(index_kind: str, m, queries, k) -> float:
+    """Fresh-build recall floor: compact the live catalog, rebuild from
+    scratch, measure against exact top-k of the compacted set."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import IpNSW, IpNSWPlus
+
+    live = m.live_ids()
+    compact = np.asarray(m.graph.items)[live]
+    cls = IpNSWPlus if index_kind == "ipnsw_plus" else IpNSW
+    fresh = cls(max_degree=16, ef_construction=32,
+                insert_batch=512).build(jnp.asarray(compact))
+    r = fresh.search(jnp.asarray(queries), k=k, ef=64)
+    gt = np.argsort(-(np.asarray(queries) @ compact.T), axis=1,
+                    kind="stable")[:, :k]
+    return _recall(np.asarray(r.ids), gt)
+
+
+def churn_rows(
+    profile: str = "word_like",
+    *,
+    quick: bool = True,
+    index_kind: str = "ipnsw",
+    seed: int = 0,
+) -> list:
+    """All ``bench=churn`` rows for one norm profile."""
+    import numpy as np
+    import jax.numpy as jnp
+    from benchmarks import common
+    from repro.core import ChurnTrace
+    from repro.data import mips_dataset, mips_queries
+    from repro.launch.serve_loop import (
+        BucketLadder,
+        LinearServiceModel,
+        ServeLoop,
+        VirtualClock,
+        poisson_trace,
+    )
+
+    n, d = (1500, 24) if quick else (12000, 48)
+    n_requests = 64 if quick else 512
+    k = common.K
+    ladder = BucketLadder(batches=(8, 32), efs=(16, 32, 64))
+
+    p = dict(common.PROFILES[profile])
+    p.pop("n_mult", None)
+    data_profile = p["profile"]
+    items = mips_dataset(n, d, **p)
+    queries = mips_queries(n_requests, d, seed=100 + seed)
+
+    rows = []
+    base = {
+        "bench": "churn",
+        "profile": profile,
+        "index": index_kind,
+        "n": n,
+        "dim": d,
+        "n_requests": n_requests,
+    }
+
+    def serve_with_churn(m, churn):
+        trace = poisson_trace(
+            queries, rate_qps=500.0, seed=seed, ef=64,
+            classes=("standard", "relaxed"),
+        )
+        loop = ServeLoop(m, ladder=ladder, clock=VirtualClock(), k=k,
+                         service_model=LinearServiceModel())
+        return loop.run(trace, churn=churn)
+
+    def post_recall(m):
+        gt = _exact_live_topk(queries, np.asarray(m.graph.items),
+                              m._live_host, k)
+        r = m.search(jnp.asarray(queries), k=k, ef=64)
+        return _recall(np.asarray(r.ids), gt)
+
+    # -- kind=turnover: churn fraction sweep, full repair, rebuild floor ----
+    turnovers = (0.1, 0.25) if quick else (0.1, 0.25, 0.5)
+    for turnover in turnovers:
+        m = _mutable(index_kind, items, capacity=int(n * 1.5))
+        churn = ChurnTrace.generate(
+            n_items=n, dim=d, duration_s=max(n_requests / 500.0, 0.05),
+            turnover=turnover, batch=32, seed=seed + 1,
+            profile=data_profile,
+        )
+        stats = serve_with_churn(m, churn)
+        while m.relink_debt():
+            m.relink(256)
+        rec_post = post_recall(m)
+        rec_floor = _rebuild_floor(index_kind, m, queries, k)
+        h = m.health()
+        s = stats.summary()
+        rows.append({
+            **base, "kind": "turnover", "turnover": turnover,
+            "mutation_events": s["mutation_events"],
+            "rejected": s["rejected"],
+            "recompiles_steady": s["recompiles_steady"],
+            "recall_at_10": round(rec_post, 4),
+            "recall_floor": round(rec_floor, 4),
+            "recall_delta": round(rec_post - rec_floor, 4),
+            "live_fraction": round(h["live_fraction"], 4),
+            "dead_edge_frac": round(h["dead_edge_frac"], 4),
+            "relink_debt": int(h["relink_debt"]),
+        })
+
+    # -- kind=relink_sweep: what a repair budget buys after a mass delete ---
+    # A delete+reinsert trace reuses tombstones immediately, so dead edges
+    # never accumulate; the scenario that actually stresses repair is a net
+    # SHRINK — delete 30% of the catalog outright and leave the tombstones
+    # in place, then sweep how much relink work the operator buys.
+    budgets = (0, 32, 10**9) if quick else (0, 64, 256, 10**9)
+    rng = np.random.default_rng(seed + 2)
+    kill = rng.choice(n, size=int(n * 0.3), replace=False)
+    for budget in budgets:
+        m = _mutable(index_kind, items, capacity=int(n * 1.5))
+        m.delete(kill)
+        if budget:
+            repaired = m.relink(budget)
+            while budget >= 10**9 and m.relink_debt():
+                repaired += m.relink(256)
+        else:
+            repaired = 0
+        h = m.health()
+        rows.append({
+            **base, "kind": "relink_sweep", "turnover": 0.3,
+            "relink_budget": min(budget, 10**9),
+            "relinked": repaired,
+            "recall_at_10": round(post_recall(m), 4),
+            "dead_edge_frac": round(h["dead_edge_frac"], 4),
+            "relink_debt": int(h["relink_debt"]),
+        })
+
+    # -- kind=hub_kill: adversarial delete + recovery curve -----------------
+    m = _mutable(index_kind, items, capacity=int(n * 1.5))
+    n_kill = max(n // 100, 8)
+    m.kill_hubs(n_kill)
+    slices = 3 if quick else 5
+    slice_budget = max(m.relink_debt() // slices, 1)
+    step = 0
+    while True:
+        h = m.health()
+        rows.append({
+            **base, "kind": "hub_kill", "killed": n_kill,
+            "relink_step": step,
+            "recall_at_10": round(post_recall(m), 4),
+            "dead_edge_frac": round(h["dead_edge_frac"], 4),
+            "relink_debt": int(h["relink_debt"]),
+        })
+        if not m.relink_debt():
+            break
+        m.relink(slice_budget)
+        step += 1
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (same as REPRO_BENCH_QUICK=1)")
+    ap.add_argument("--profiles", nargs="*", default=None,
+                    help="benchmarks.common.PROFILES names "
+                         "(default: music_like word_like)")
+    ap.add_argument("--index", default="ipnsw",
+                    choices=["ipnsw", "ipnsw_plus"])
+    args = ap.parse_args()
+    if args.quick:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+
+    from benchmarks.common import QUICK, emit
+
+    quick = args.quick or QUICK
+    profiles = args.profiles or ["music_like", "word_like"]
+    seen_kinds = set()
+    for profile in profiles:
+        rows = churn_rows(profile, quick=quick, index_kind=args.index)
+        # Row schemas differ per kind — print each kind as its own CSV block
+        # (the JSON mirror is schema-free either way).
+        for kind in ("turnover", "relink_sweep", "hub_kill"):
+            block = [r for r in rows if r["kind"] == kind]
+            emit(block, header=kind not in seen_kinds)
+            seen_kinds.add(kind)
+
+
+if __name__ == "__main__":
+    main()

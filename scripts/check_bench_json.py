@@ -13,6 +13,12 @@ observability contract is broken:
       every row carries the p50/p99/QPS/recall/occupancy/recompile columns,
       serves every request (the loop never rejects), and reports ZERO
       steady-state recompiles — a bucket-ladder regression fails CI here.
+  churn — the mutation layer's contract (core/mutation.py): on every
+      ``kind=turnover`` row the post-churn, fully-relinked recall@10 must
+      sit within 0.02 of the fresh-rebuild floor, no request may be
+      rejected during churn, the churned graph must still be compile-once
+      (zero steady recompiles), and ``relink_debt`` must reach 0 after the
+      full repair.
 
 A file with none of the known families fails outright.
 
@@ -84,9 +90,67 @@ def check_serve(rows: list) -> list:
     return errors
 
 
+CHURN_COLS = {
+    "profile", "kind", "recall_at_10", "dead_edge_frac", "relink_debt",
+}
+
+CHURN_TURNOVER_COLS = CHURN_COLS | {
+    "turnover", "rejected", "recompiles_steady", "recall_floor",
+    "recall_delta", "mutation_events",
+}
+
+# Maximum recall@10 a fully-relinked mutated index may sit below a fresh
+# rebuild of the same catalog (ISSUE acceptance bar).
+CHURN_RECALL_SLACK = 0.02
+
+
+def check_churn(rows: list) -> list:
+    errors = []
+    missing = _missing_cols(rows, CHURN_COLS)
+    if missing:
+        errors.append(f"churn rows missing columns: {missing[0]}")
+        return errors
+    turnover = [r for r in rows if r["kind"] == "turnover"]
+    if not turnover:
+        errors.append("churn family needs at least one kind=turnover row")
+    missing = _missing_cols(turnover, CHURN_TURNOVER_COLS)
+    if missing:
+        errors.append(f"churn turnover rows missing columns: {missing[0]}")
+        return errors
+    for r in turnover:
+        tag = f"churn[{r.get('profile')},turnover={r.get('turnover')}]"
+        if int(r["rejected"]) != 0:
+            errors.append(
+                f"{tag}: {r['rejected']} requests rejected during churn — "
+                "the loop must degrade, never reject"
+            )
+        if int(r["recompiles_steady"]) != 0:
+            errors.append(
+                f"{tag}: {r['recompiles_steady']} steady-state recompiles — "
+                "mutation must stay fixed-shape / compile-once"
+            )
+        if int(r["mutation_events"]) <= 0:
+            errors.append(f"{tag}: no mutation events applied")
+        if int(r["relink_debt"]) != 0:
+            errors.append(
+                f"{tag}: relink_debt {r['relink_debt']} after full repair"
+            )
+        delta = float(r["recall_at_10"]) - float(r["recall_floor"])
+        if delta < -CHURN_RECALL_SLACK:
+            errors.append(
+                f"{tag}: post-churn recall {r['recall_at_10']} is "
+                f"{-delta:.4f} below the fresh-build floor "
+                f"{r['recall_floor']} (budget {CHURN_RECALL_SLACK})"
+            )
+        if not 0.0 < float(r["recall_at_10"]) <= 1.0:
+            errors.append(f"{tag}: implausible recall {r['recall_at_10']}")
+    return errors
+
+
 FAMILIES = {
     "build_phase": check_build_phase,
     "serve": check_serve,
+    "churn": check_churn,
 }
 
 

@@ -4,10 +4,21 @@ from repro.core.brute_force import exact_topk
 from repro.core.build import BUILD_BACKENDS, build_graph
 from repro.core.graph import GraphIndex, empty_graph, in_degrees, out_degrees
 from repro.core.hnsw import HierarchicalIpNSW
+from repro.core.invariants import (
+    assert_graph_invariants,
+    check_graph_invariants,
+    dead_edge_fraction,
+)
 from repro.core.ipnsw import IpNSW
 from repro.core.ipnsw_plus import IpNSWPlus, PlusResult
 from repro.core.lsh import SimpleLSH
 from repro.core.metrics import recall_at_k, recall_curve
+from repro.core.mutation import (
+    ChurnEvent,
+    ChurnTrace,
+    MutableIndex,
+    apply_churn_event,
+)
 from repro.core.norm_filter import NormFilteredIndex
 from repro.core.search import SearchResult, beam_search
 from repro.core.similarity import Similarity, normalize
@@ -23,7 +34,14 @@ __all__ = [
     "BUILD_BACKENDS",
     "STORAGE_BACKENDS",
     "ItemStore",
+    "ChurnEvent",
+    "ChurnTrace",
     "GraphIndex",
+    "MutableIndex",
+    "apply_churn_event",
+    "assert_graph_invariants",
+    "check_graph_invariants",
+    "dead_edge_fraction",
     "HierarchicalIpNSW",
     "NormFilteredIndex",
     "IpNSW",

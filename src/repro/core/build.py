@@ -180,13 +180,20 @@ def _bootstrap_neighbors(batch_items: jax.Array, max_degree: int):
 def find_neighbors(
     graph: GraphIndex,
     batch_items: jax.Array,
+    live: Optional[jax.Array] = None,
     *,
     max_degree: int,
     ef: int,
     max_steps: int,
     backend: str = "reference",
 ):
-    """Algorithm-1 search of the current graph for each batch item's top-M."""
+    """Algorithm-1 search of the current graph for each batch item's top-M.
+
+    ``live`` ([N] bool) is the mutation layer's tombstone mask: upsert and
+    relink pass it so the chosen neighbors are guaranteed live — the walk
+    still routes through tombstones, but a dead node must never become an
+    out-edge of fresh content (it would re-spend the dead-edge budget the
+    repair pass exists to pay down).  Fresh builds leave it None."""
     b = batch_items.shape[0]
     init = jnp.broadcast_to(graph.entry[None, None], (b, 1)).astype(jnp.int32)
     res = beam_search(
@@ -197,6 +204,7 @@ def find_neighbors(
         max_steps=max_steps,
         k=max_degree,
         backend=backend,
+        live=live,
     )
     ids = jnp.where(res.scores > NEG_INF, res.ids, -1)
     return ids, res.scores

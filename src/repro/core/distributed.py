@@ -50,6 +50,13 @@ class ShardedIndex(NamedTuple):
            or None (f32 / legacy indexes).  Tail-shard pad rows quantize to
            all-zero codes, so their quantized scores are exactly the fp32
            path's 0.0 and the same ``count`` mask drops them at merge.
+    live:  [P, Nloc] bool per-shard tombstone masks (core/mutation.py), or
+           None (no deletions).  ``count`` only masks the zero-pad TAIL of
+           the last shard; an INTERIOR delete is a live catalog row gone
+           stale, which only this mask can drop — both inside the local
+           walks (dead nodes route but never surface, search.beam_search)
+           and again at the merge, so a shard whose local top-k still cites
+           a tombstone cannot leak it into the global result.
     """
 
     ip: GraphIndex
@@ -58,6 +65,7 @@ class ShardedIndex(NamedTuple):
     count: Optional[jax.Array] = None
     store: Optional[ItemStore] = None
     ang_store: Optional[ItemStore] = None
+    live: Optional[jax.Array] = None
 
 
 def stack_shards(
@@ -248,6 +256,7 @@ def _local_ipnsw(
         g, queries, init, pool_size=max(ef, k), max_steps=max_steps, k=k,
         backend=backend, storage=storage,
         store=graphs.store if storage == "int8" else None,
+        live=graphs.live,
     )
     return res.ids, res.scores, res.evals
 
@@ -279,25 +288,34 @@ def _local_ipnsw_plus(
         backend=backend,
         storage=storage,
         store=graphs.ang_store if storage == "int8" else None,
+        live=graphs.live,
     )
     seeds = _seed_from_angular(graphs.ip.adj, a.ids)
     r = beam_search(
         graphs.ip, queries, seeds, pool_size=max(ef, k), max_steps=max_steps, k=k,
         backend=backend, storage=storage,
         store=graphs.store if storage == "int8" else None,
+        live=graphs.live,
     )
     return r.ids, r.scores, a.evals + r.evals
 
 
 def _globalize(blk: ShardedIndex, ids: jax.Array, scores: jax.Array):
-    """Map local result ids to global ids, dropping pad nodes.
+    """Map local result ids to global ids, dropping pad and tombstoned nodes.
 
     Pad rows of the tail shard are genuine local graph vertices with
     zero vectors (score 0.0); without the ``count`` mask they would
-    outrank real negative-score items and surface ids >= N."""
+    outrank real negative-score items and surface ids >= N.  ``count``
+    is a tail bound only — an INTERIOR tombstone (streaming delete,
+    core/mutation.py) needs the ``live`` row mask; the local walks already
+    filter it, and masking here again makes the merge safe even against a
+    local path that missed the mask (defense in depth for the latent gap
+    pinned in tests/test_mutation.py)."""
     keep = ids >= 0
     if blk.count is not None:
         keep &= ids < blk.count
+    if blk.live is not None:
+        keep &= blk.live.astype(bool)[jnp.maximum(ids, 0)]
     gids = jnp.where(keep, ids + blk.offset, -1)
     return gids, jnp.where(keep, scores, NEG_INF)
 

@@ -1,0 +1,135 @@
+"""Graph-invariant checker — the safety net under streaming mutation.
+
+A build-once index can be validated once; a mutating one (core/mutation.py)
+must be checkable at any point of its life, because a single bad commit —
+an out-of-range id, an entry pointing at a tombstone, a region whose edges
+all lead to dead nodes — silently degrades every search after it.  This
+module states the invariants once and makes them cheap enough to run after
+every test build and, opt-in, inside the serving loop.
+
+Invariants (DESIGN.md §9):
+  I1  adjacency ids are in ``[-1, capacity)`` — -1 is the empty-slot pad,
+      anything else must be a real row.
+  I2  edges only point at *used* slots (``id < size``): the build inserts
+      ids in ascending order and mutation only reuses previously-used slots,
+      so an edge into the never-used tail means a corrupted commit.
+  I3  no self-loops: a node never lists itself as its own neighbor (walks
+      would burn a pool slot re-scoring their own row).
+  I4  the entry vertex is a used slot, and — when a live mask exists — a
+      LIVE one.  A tombstoned entry still routes (walks traverse through
+      dead nodes) but violates the mutation layer's contract that deletes
+      re-seat the entry immediately.
+  I5  live rows exist only among used slots (``live[size:]`` is all False).
+  I6  the dead-edge fraction — edges from live nodes into non-live targets,
+      over all edges from live nodes — stays under ``max_dead_edge_frac``.
+      This is the navigability budget churn spends and ``relink`` repays;
+      the threshold is the caller's degradation tolerance, not a constant.
+
+``check_graph_invariants`` returns the violation list (empty = healthy) so
+benchmarks can report without raising; ``assert_graph_invariants`` wraps it
+for tests and the opt-in runtime assertion in the serving loop.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.graph import GraphIndex
+
+
+def dead_edge_fraction(
+    adj: np.ndarray, live: np.ndarray, size: int
+) -> float:
+    """Fraction of out-edges of LIVE used rows whose target is not live.
+
+    -1 pads are not edges; edges out of dead rows don't count (dead rows are
+    routing fossils — their staleness is expected and harmless)."""
+    adj = np.asarray(adj)[:size]
+    live = np.asarray(live, bool)
+    row_live = live[:size]
+    edge = (adj >= 0) & row_live[:, None]
+    n_edges = int(edge.sum())
+    if n_edges == 0:
+        return 0.0
+    dead = edge & ~live[np.maximum(adj, 0)]
+    return float(dead.sum()) / n_edges
+
+
+def check_graph_invariants(
+    graph: GraphIndex,
+    live: Optional[np.ndarray] = None,
+    *,
+    max_dead_edge_frac: float = 1.0,
+    name: str = "graph",
+) -> List[str]:
+    """Validate I1–I6 on host; returns a list of violation strings."""
+    adj = np.asarray(graph.adj)
+    n, _ = adj.shape
+    size = int(graph.size)
+    entry = int(graph.entry)
+    errs: List[str] = []
+
+    if size < 0 or size > n:
+        errs.append(f"{name}: size {size} outside [0, capacity={n}]")
+        size = max(0, min(size, n))
+
+    used = adj[:size]
+    if used.size:
+        amin, amax = int(used.min()), int(used.max())
+        if amin < -1 or amax >= n:                                      # I1
+            errs.append(
+                f"{name}: adjacency ids span [{amin}, {amax}], "
+                f"outside [-1, {n})"
+            )
+        elif amax >= size:                                              # I2
+            bad = int(((used >= size)).sum())
+            errs.append(
+                f"{name}: {bad} edges point at never-used slots >= "
+                f"size={size}"
+            )
+        rows = np.arange(size)[:, None]
+        loops = int((used == rows).sum())                               # I3
+        if loops:
+            errs.append(f"{name}: {loops} self-loop edges")
+
+    if size > 0 and not (0 <= entry < size):                            # I4
+        errs.append(f"{name}: entry {entry} is not a used slot (< {size})")
+
+    if live is not None:
+        live = np.asarray(live, bool)
+        if live.shape != (n,):
+            errs.append(
+                f"{name}: live mask shape {live.shape} != ({n},)"
+            )
+            return errs
+        if size > 0 and live.any() and not live[entry]:                 # I4
+            errs.append(f"{name}: entry {entry} is tombstoned")
+        tail_live = int(live[size:].sum())                              # I5
+        if tail_live:
+            errs.append(
+                f"{name}: {tail_live} live rows beyond size={size}"
+            )
+        frac = dead_edge_fraction(adj, live, size)                      # I6
+        if frac > max_dead_edge_frac:
+            errs.append(
+                f"{name}: dead-edge fraction {frac:.3f} exceeds "
+                f"{max_dead_edge_frac:.3f}"
+            )
+    return errs
+
+
+def assert_graph_invariants(
+    graph: GraphIndex,
+    live: Optional[np.ndarray] = None,
+    *,
+    max_dead_edge_frac: float = 1.0,
+    name: str = "graph",
+) -> None:
+    errs = check_graph_invariants(
+        graph, live, max_dead_edge_frac=max_dead_edge_frac, name=name
+    )
+    if errs:
+        raise AssertionError(
+            "graph invariants violated:\n  " + "\n  ".join(errs)
+        )

@@ -28,6 +28,7 @@ def _search(
     queries,
     store: Optional[ItemStore] = None,
     valid=None,
+    live=None,
     *,
     pool_size: int,
     max_steps: int,
@@ -39,7 +40,7 @@ def _search(
     init = jnp.broadcast_to(graph.entry[None, None], (b, 1)).astype(jnp.int32)
     return beam_search(
         graph, queries, init, pool_size=pool_size, max_steps=max_steps, k=k,
-        backend=backend, storage=storage, store=store, valid=valid,
+        backend=backend, storage=storage, store=store, valid=valid, live=live,
     )
 
 
@@ -111,15 +112,18 @@ class IpNSW:
         backend: Optional[str] = None,
         storage: Optional[str] = None,
         valid: Optional[jax.Array] = None,
+        live: Optional[jax.Array] = None,
     ) -> SearchResult:
         """``valid`` is the [B] bucket-padding mask (search.beam_search):
         pad rows return ids=-1 at zero eval cost, live rows are bit-identical
-        to an unpadded call — the serving loop's fixed-shape entry point."""
+        to an unpadded call — the serving loop's fixed-shape entry point.
+        ``live`` is the [N] tombstone mask (core/mutation.py): dead nodes
+        route the walk but never appear in results."""
         assert self.graph is not None, "call build() first"
         steps = max_steps if max_steps is not None else 2 * ef
         st = storage if storage is not None else self.storage
         return _search(
-            self.graph, queries, self._resolve_store(st), valid,
+            self.graph, queries, self._resolve_store(st), valid, live,
             pool_size=max(ef, k), max_steps=steps, k=k,
             backend=backend if backend is not None else self.backend,
             storage=st,

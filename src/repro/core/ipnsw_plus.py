@@ -81,6 +81,7 @@ def _search_plus(
     ang_store: Optional[ItemStore] = None,
     ip_store: Optional[ItemStore] = None,
     valid: Optional[jax.Array] = None,
+    live: Optional[jax.Array] = None,
     *,
     k: int,
     ef: int,
@@ -100,6 +101,13 @@ def _search_plus(
     # with its own exact fp32 rerank, which for the angular stage merely
     # re-orders the seed neighborhood and for the ip stage is the final
     # asymmetric refine (DESIGN.md §8).
+    # Both graphs index the SAME catalog slots, so one live mask serves both
+    # walks (core/mutation.py tombstones a slot in A_s and G_s atomically).
+    # The angular stage must also filter dead ids from ITS results: a dead
+    # angular neighbor still routes the A_s walk, but its G_s out-edges are
+    # stale precisely when it was deleted, so seeding from it would feed the
+    # refine stage dead-leaning seeds.  (Seed rows themselves are -1-masked
+    # through _seed_from_angular when the angular id is -1.)
     ang = beam_search(
         ang_graph,
         queries,
@@ -111,6 +119,7 @@ def _search_plus(
         storage=storage,
         store=ang_store,
         valid=valid,
+        live=live,
     )
     seeds = _seed_from_angular(ip_graph.adj, ang.ids)
     ip = beam_search(
@@ -124,6 +133,7 @@ def _search_plus(
         storage=storage,
         store=ip_store,
         valid=valid,
+        live=live,
     )
     return PlusResult(
         ids=ip.ids,
@@ -309,10 +319,13 @@ class IpNSWPlus:
         backend: Optional[str] = None,
         storage: Optional[str] = None,
         valid: Optional[jax.Array] = None,
+        live: Optional[jax.Array] = None,
     ) -> PlusResult:
         """``valid`` is the [B] bucket-padding mask (search.beam_search),
         applied to BOTH walks: pad rows skip the angular stage, seed nothing,
-        and return ids=-1 — the serving loop's fixed-shape entry point."""
+        and return ids=-1 — the serving loop's fixed-shape entry point.
+        ``live`` is the [N] tombstone mask (core/mutation.py), shared by both
+        walks since the two graphs index the same catalog slots."""
         assert self.ip_graph is not None, "call build() first"
         ang_ef = ang_ef if ang_ef is not None else self.ang_ef
         k_ang = k_angular if k_angular is not None else self.k_angular
@@ -330,6 +343,7 @@ class IpNSWPlus:
             ang_store,
             ip_store,
             valid,
+            live,
             k=k,
             ef=ef,
             ang_ef=ang_ef,
@@ -348,6 +362,7 @@ def _find_ip_neighbors_seeded(
     ip_graph: GraphIndex,
     batch_items: jax.Array,
     ang_nbr_ids: jax.Array,
+    live: Optional[jax.Array] = None,
     *,
     max_degree: int,
     ef: int,
@@ -355,7 +370,9 @@ def _find_ip_neighbors_seeded(
     backend: str = "reference",
 ):
     """§4.2 insertion: find an item's G_s neighbors by the ip-NSW+ search
-    (angular-seeded walk) instead of a cold entry-vertex walk."""
+    (angular-seeded walk) instead of a cold entry-vertex walk.  ``live`` is
+    the mutation layer's tombstone mask — upserts pass it so fresh content
+    never links to a dead slot (build.find_neighbors has the same knob)."""
     seeds = _seed_from_angular(ip_graph.adj, ang_nbr_ids)
     # include the entry vertex so the very first batches (sparse adjacency)
     # still have a valid start.
@@ -370,6 +387,7 @@ def _find_ip_neighbors_seeded(
         max_steps=max_steps,
         k=max_degree,
         backend=backend,
+        live=live,
     )
     ids = jnp.where(res.scores > NEG_INF, res.ids, -1)
     return ids, res.scores

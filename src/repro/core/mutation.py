@@ -1,0 +1,767 @@
+"""Streaming index mutation — live upsert / tombstone delete / relink repair.
+
+The paper's graphs are built once and served forever; production catalogs
+churn.  The norm bias the paper identifies (§3–4) makes churn *dangerous*
+rather than merely inconvenient: walks funnel through a small set of
+large-norm, high-in-degree hubs, so deleting a few of them can sever
+navigability far out of proportion to the fraction of items removed.  This
+module is the robustness layer that absorbs interleaved upserts, deletes and
+adversarial hub failures with bounded, measurable degradation (DESIGN.md §9):
+
+  tombstones  — a delete flips one bit of a ``[N] bool`` live mask.  Dead
+                nodes KEEP their vectors and adjacency: walks traverse
+                through them (they remain the routing highways), but every
+                search path filters them from results
+                (``search.beam_search(live=)``) so they are never returned.
+  free slots  — a fixed-capacity slot pool.  Upserts reuse tombstoned slots
+                (FIFO by deletion time) before touching never-used headroom,
+                so steady-state churn holds the graph's high-water mark flat
+                and every mutation is an in-place row update under jit with
+                donated carries — no reallocation, no recompilation.
+  relink      — the incremental repair pass.  A live node whose out-edges
+                point mostly at tombstones is a routing dead-end in the
+                making; ``relink(budget)`` re-runs the Algorithm-2 neighbor
+                search (live-masked) + commit for the worst offenders,
+                paying down "relink debt" a budget-slice at a time so repair
+                work interleaves with serving instead of stopping the world.
+
+``MutableIndex`` wraps a built ``IpNSW`` or ``IpNSWPlus`` (both graphs of the
+latter mutate atomically — the two index the same catalog slots, so one live
+mask serves both).  ``ChurnTrace`` generates the seeded churn/fault-injection
+event streams (upserts, deletes, hub kills, relinks) that
+``launch/serve_loop.ServeLoop.run(churn=)`` replays against query traffic,
+and ``core/invariants.py`` is the safety net checked in tests and opt-in at
+runtime.
+"""
+from __future__ import annotations
+
+import functools
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.build import NEG_INF, commit_batch, find_neighbors
+from repro.core.graph import GraphIndex, in_degrees
+from repro.core.invariants import check_graph_invariants, dead_edge_fraction
+from repro.core.ipnsw import IpNSW
+from repro.core.ipnsw_plus import IpNSWPlus, _find_ip_neighbors_seeded
+from repro.core.similarity import normalize
+from repro.core.storage import ItemStore, quantize_items, update_store_rows
+from repro.kernels.commit_merge import resolve_commit_tile
+
+
+# ---------------------------------------------------------------------------
+# jitted mutation bodies (fixed shapes; adjacency/items/norms/live donated)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_degree", "ef", "max_steps", "backend",
+                     "commit_backend", "commit_tile", "reverse_links"),
+    donate_argnums=(0, 1, 2, 3),
+)
+def _upsert_arrays(
+    adj, items, norms, live, size, entry, entry_norm,
+    slots, new_items, valid, *,
+    max_degree, ef, max_steps, backend,
+    commit_backend, commit_tile, reverse_links,
+):
+    """One padded upsert batch against a plain ip-NSW graph.
+
+    Batch slots are dead for the duration of the neighbor search (fresh
+    slots were never live; reused slots are tombstones), so the live-masked
+    walk can neither link a new item to a batch member's half-written row
+    nor to itself; they flip live only after the commit lands."""
+    n = adj.shape[0]
+    rows = jnp.where(valid, slots, n)          # pad rows drop out of range
+    items = items.at[rows].set(new_items, mode="drop")
+    norms = norms.at[rows].set(
+        jnp.linalg.norm(new_items, axis=-1), mode="drop"
+    )
+    live = live.at[rows].set(False, mode="drop")
+    graph = GraphIndex(adj=adj, items=items, size=size, entry=entry,
+                       entry_norm=entry_norm)
+    nbr, sc = find_neighbors(
+        graph, new_items, live, max_degree=max_degree, ef=ef,
+        max_steps=max_steps, backend=backend,
+    )
+    nbr = jnp.where(valid[:, None], nbr, -1)
+    sc = jnp.where(valid[:, None], sc, NEG_INF)
+    g = commit_batch(
+        graph, slots, nbr, sc, norms, valid=valid,
+        reverse_links=reverse_links, commit_backend=commit_backend,
+        commit_tile=commit_tile,
+    )
+    live = live.at[rows].set(True, mode="drop")
+    return g.adj, g.size, g.entry, g.entry_norm, items, norms, live
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_degree", "ef", "max_steps", "ang_degree", "ang_ef",
+                     "ang_max_steps", "k_angular", "backend",
+                     "commit_backend", "commit_tile", "reverse_links"),
+    donate_argnums=(0, 1, 2, 3, 4, 5),
+)
+def _upsert_plus_arrays(
+    a_adj, i_adj, items, ang_items, norms, live,
+    a_size, a_entry, a_enorm, i_size, i_entry, i_enorm,
+    slots, new_items, valid, *,
+    max_degree, ef, max_steps, ang_degree, ang_ef, ang_max_steps, k_angular,
+    backend, commit_backend, commit_tile, reverse_links,
+):
+    """One padded upsert batch against BOTH ip-NSW+ graphs (§4.2 order:
+    angular insert first, then the angular-seeded ip insert)."""
+    n = i_adj.shape[0]
+    new_ang = normalize(new_items)
+    rows = jnp.where(valid, slots, n)
+    items = items.at[rows].set(new_items, mode="drop")
+    ang_items = ang_items.at[rows].set(new_ang, mode="drop")
+    norms = norms.at[rows].set(
+        jnp.linalg.norm(new_items, axis=-1), mode="drop"
+    )
+    live = live.at[rows].set(False, mode="drop")
+    ang_norms = jnp.ones_like(norms)
+
+    ang_g = GraphIndex(adj=a_adj, items=ang_items, size=a_size,
+                       entry=a_entry, entry_norm=a_enorm)
+    ip_g = GraphIndex(adj=i_adj, items=items, size=i_size,
+                      entry=i_entry, entry_norm=i_enorm)
+
+    a_nbr, a_sc = find_neighbors(
+        ang_g, new_ang, live, max_degree=ang_degree,
+        ef=max(ang_ef, ang_degree), max_steps=ang_max_steps, backend=backend,
+    )
+    ang2 = commit_batch(
+        ang_g, slots,
+        jnp.where(valid[:, None], a_nbr, -1),
+        jnp.where(valid[:, None], a_sc, NEG_INF),
+        ang_norms, valid=valid, reverse_links=reverse_links,
+        commit_backend=commit_backend, commit_tile=commit_tile,
+    )
+
+    g_nbr, g_sc = _find_ip_neighbors_seeded(
+        ip_g, new_items, a_nbr[:, :k_angular], live,
+        max_degree=max_degree, ef=ef, max_steps=max_steps, backend=backend,
+    )
+    ip2 = commit_batch(
+        ip_g, slots,
+        jnp.where(valid[:, None], g_nbr, -1),
+        jnp.where(valid[:, None], g_sc, NEG_INF),
+        norms, valid=valid, reverse_links=reverse_links,
+        commit_backend=commit_backend, commit_tile=commit_tile,
+    )
+    live = live.at[rows].set(True, mode="drop")
+    return (ang2.adj, ang2.size, ang2.entry, ang2.entry_norm,
+            ip2.adj, ip2.size, ip2.entry, ip2.entry_norm,
+            items, ang_items, norms, live)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _delete_arrays(live, norms, entry, entry_norm, ids, valid):
+    """Flip tombstone bits and re-seat the entry vertex if it died.
+
+    The replacement entry is the max-norm LIVE node — the same criterion the
+    build maintains incrementally — recomputed here with one full masked
+    argmax, which is fine on the rare delete-hit-the-entry path."""
+    n = live.shape[0]
+    live = live.at[jnp.where(valid, ids, n)].set(False, mode="drop")
+    masked = jnp.where(live, norms, NEG_INF)
+    new_entry = jnp.argmax(masked).astype(jnp.int32)
+    need = ~live[entry]
+    entry = jnp.where(need, new_entry, entry).astype(jnp.int32)
+    entry_norm = jnp.where(need, masked[new_entry],
+                           entry_norm).astype(jnp.float32)
+    return live, entry, entry_norm, need
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_degree", "ef", "max_steps", "backend",
+                     "commit_backend", "commit_tile", "reverse_links"),
+    donate_argnums=(0,),
+)
+def _relink_arrays(
+    adj, items, norms, live, size, entry, entry_norm, slots, valid, *,
+    max_degree, ef, max_steps, backend,
+    commit_backend, commit_tile, reverse_links,
+):
+    """Re-run find+commit for a batch of live nodes whose out-edges rotted.
+
+    Unlike an upsert the node itself is live during the search (it must stay
+    servable), so its own id can come back as its best neighbor — masked to
+    -1 before the commit (invariant I3)."""
+    graph = GraphIndex(adj=adj, items=items, size=size, entry=entry,
+                       entry_norm=entry_norm)
+    b_items = jnp.take(items, slots, axis=0)
+    nbr, sc = find_neighbors(
+        graph, b_items, live, max_degree=max_degree, ef=ef,
+        max_steps=max_steps, backend=backend,
+    )
+    self_hit = nbr == slots[:, None]
+    nbr = jnp.where(self_hit | ~valid[:, None], -1, nbr)
+    sc = jnp.where(self_hit | ~valid[:, None], NEG_INF, sc)
+    g = commit_batch(
+        graph, slots, nbr, sc, norms, valid=valid,
+        reverse_links=reverse_links, commit_backend=commit_backend,
+        commit_tile=commit_tile,
+    )
+    return g.adj, g.size, g.entry, g.entry_norm
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_degree", "ef", "max_steps", "ang_degree", "ang_ef",
+                     "ang_max_steps", "k_angular", "backend",
+                     "commit_backend", "commit_tile", "reverse_links"),
+    donate_argnums=(0, 1),
+)
+def _relink_plus_arrays(
+    a_adj, i_adj, items, ang_items, norms, live,
+    a_size, a_entry, a_enorm, i_size, i_entry, i_enorm,
+    slots, valid, *,
+    max_degree, ef, max_steps, ang_degree, ang_ef, ang_max_steps, k_angular,
+    backend, commit_backend, commit_tile, reverse_links,
+):
+    ang_norms = jnp.ones_like(norms)
+    ang_g = GraphIndex(adj=a_adj, items=ang_items, size=a_size,
+                       entry=a_entry, entry_norm=a_enorm)
+    ip_g = GraphIndex(adj=i_adj, items=items, size=i_size,
+                      entry=i_entry, entry_norm=i_enorm)
+
+    a_nbr, a_sc = find_neighbors(
+        ang_g, jnp.take(ang_items, slots, axis=0), live,
+        max_degree=ang_degree, ef=max(ang_ef, ang_degree),
+        max_steps=ang_max_steps, backend=backend,
+    )
+    a_self = a_nbr == slots[:, None]
+    ang2 = commit_batch(
+        ang_g, slots,
+        jnp.where(a_self | ~valid[:, None], -1, a_nbr),
+        jnp.where(a_self | ~valid[:, None], NEG_INF, a_sc),
+        ang_norms, valid=valid, reverse_links=reverse_links,
+        commit_backend=commit_backend, commit_tile=commit_tile,
+    )
+
+    g_nbr, g_sc = _find_ip_neighbors_seeded(
+        ip_g, jnp.take(items, slots, axis=0), a_nbr[:, :k_angular], live,
+        max_degree=max_degree, ef=ef, max_steps=max_steps, backend=backend,
+    )
+    g_self = g_nbr == slots[:, None]
+    ip2 = commit_batch(
+        ip_g, slots,
+        jnp.where(g_self | ~valid[:, None], -1, g_nbr),
+        jnp.where(g_self | ~valid[:, None], NEG_INF, g_sc),
+        norms, valid=valid, reverse_links=reverse_links,
+        commit_backend=commit_backend, commit_tile=commit_tile,
+    )
+    return (ang2.adj, ang2.size, ang2.entry, ang2.entry_norm,
+            ip2.adj, ip2.size, ip2.entry, ip2.entry_norm)
+
+
+# ---------------------------------------------------------------------------
+# MutableIndex
+# ---------------------------------------------------------------------------
+
+
+def _pad_graph(g: GraphIndex, capacity: int) -> GraphIndex:
+    n, _ = g.adj.shape
+    if capacity == n:
+        return g
+    pad = capacity - n
+    return GraphIndex(
+        adj=jnp.pad(g.adj, ((0, pad), (0, 0)), constant_values=-1),
+        items=jnp.pad(g.items, ((0, pad), (0, 0))),
+        size=g.size, entry=g.entry, entry_norm=g.entry_norm,
+    )
+
+
+class MutableIndex:
+    """A built ``IpNSW``/``IpNSWPlus`` opened for streaming mutation.
+
+    Construction pads the graph arrays once to ``capacity`` rows (never-used
+    tail: adj -1, items 0, live False); every subsequent mutation is a
+    fixed-shape jitted update with donated carries, so steady-state churn
+    triggers zero recompiles and zero reallocations.  Mutations are applied
+    in padded batches of ``mutation_batch`` — the one compiled program per
+    (op, shape) pair that makes the jit cache stable.
+
+    Slot policy (deterministic): tombstoned slots are reused FIFO by
+    deletion time, then never-used headroom in ascending order.  When both
+    are exhausted, ``upsert`` raises RuntimeError BEFORE touching any device
+    state — graceful refusal, never corruption (tests/test_mutation.py).
+
+    The wrapped index object stays the single source of truth for search:
+    every mutation writes the updated graphs (and int8 store rows) back into
+    it, and ``search()`` delegates with ``live=`` attached.  Consistency is
+    per-batch: a search issued between two mutation batches sees the fully
+    committed prefix, nothing half-written.
+    """
+
+    def __init__(
+        self,
+        index: Union[IpNSW, IpNSWPlus],
+        *,
+        capacity: Optional[int] = None,
+        mutation_batch: int = 32,
+        relink_threshold: float = 0.3,
+    ):
+        if not isinstance(index, (IpNSW, IpNSWPlus)):
+            raise TypeError(
+                f"MutableIndex wraps IpNSW or IpNSWPlus, got {type(index)}"
+            )
+        self.index = index
+        self.plus = isinstance(index, IpNSWPlus)
+        g = index.ip_graph if self.plus else index.graph
+        if g is None:
+            raise ValueError("index must be built before mutation")
+        n0 = g.capacity
+        self.capacity = n0 if capacity is None else int(capacity)
+        if self.capacity < n0:
+            raise ValueError(
+                f"capacity {self.capacity} below built size {n0}"
+            )
+        if mutation_batch <= 0:
+            raise ValueError(f"mutation_batch must be positive, got "
+                             f"{mutation_batch}")
+        self.mutation_batch = int(mutation_batch)
+        self.relink_threshold = float(relink_threshold)
+
+        if self.plus:
+            index.ip_graph = _pad_graph(index.ip_graph, self.capacity)
+            index.ang_graph = _pad_graph(index.ang_graph, self.capacity)
+            g = index.ip_graph
+        else:
+            index.graph = _pad_graph(index.graph, self.capacity)
+            g = index.graph
+        self._pad_stores()
+
+        size0 = int(g.size)
+        self.norms = jnp.linalg.norm(g.items, axis=-1)
+        self.live = (jnp.arange(self.capacity) < size0)
+        self._live_host = np.asarray(self.live).copy()
+        self._next_fresh = size0
+        self._free: deque = deque()   # tombstones, FIFO by deletion time
+        self.mutation_count = 0
+
+        # Static commit tile resolved once, on host, from the live norms —
+        # the same norm-skew heuristic the build drivers use.
+        self._commit_tile = resolve_commit_tile(
+            index.commit_tile,
+            e=self.mutation_batch * index.max_degree,
+            norms=np.asarray(self.norms)[:size0],
+        )
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def graph(self) -> GraphIndex:
+        """The (ip) graph currently served."""
+        return self.index.ip_graph if self.plus else self.index.graph
+
+    @property
+    def size(self) -> int:
+        """High-water mark of used slots (tombstones included)."""
+        return int(self.graph.size)
+
+    def free_slots(self) -> int:
+        return len(self._free) + (self.capacity - self._next_fresh)
+
+    def live_ids(self) -> np.ndarray:
+        return np.flatnonzero(self._live_host)
+
+    # -- store / graph write-back helpers ----------------------------------
+
+    def _pad_stores(self) -> None:
+        idx = self.index
+        def pad(store: Optional[ItemStore], items) -> Optional[ItemStore]:
+            if store is None:
+                return None
+            n = store.scales.shape[0]
+            if n == self.capacity:
+                return store
+            # Re-derive from the padded items: pad rows are zero vectors,
+            # which quantize to zero codes / epsilon scales (score 0.0).
+            return quantize_items(items)
+        if self.plus:
+            idx.ip_store = pad(idx.ip_store, idx.ip_graph.items)
+            idx.ang_store = pad(idx.ang_store, idx.ang_graph.items)
+        else:
+            idx.store = pad(idx.store, idx.graph.items)
+
+    def _sync_store_rows(self, slots: jax.Array, new_items: jax.Array,
+                         new_ang: Optional[jax.Array], valid) -> None:
+        """Mirror an upsert's item rows into the cached int8 stores (rows of
+        pad slots are dropped the same way the array updates drop them)."""
+        idx = self.index
+        n = self.capacity
+        rows = jnp.where(jnp.asarray(valid), jnp.asarray(slots), n)
+        if self.plus:
+            if idx.ip_store is not None:
+                idx.ip_store = update_store_rows(idx.ip_store, rows, new_items)
+            if idx.ang_store is not None:
+                idx.ang_store = update_store_rows(idx.ang_store, rows, new_ang)
+        elif idx.store is not None:
+            idx.store = update_store_rows(idx.store, rows, new_items)
+
+    # -- allocation --------------------------------------------------------
+
+    def _allocate(self, b: int) -> np.ndarray:
+        if b > self.free_slots():
+            raise RuntimeError(
+                f"free-slot pool exhausted: need {b} slots, have "
+                f"{self.free_slots()} (capacity {self.capacity}, "
+                f"high-water {self._next_fresh}, tombstones "
+                f"{len(self._free)}) — grow capacity= or delete first"
+            )
+        out: List[int] = []
+        while len(out) < b and self._free:
+            out.append(self._free.popleft())
+        while len(out) < b:
+            out.append(self._next_fresh)
+            self._next_fresh += 1
+        return np.asarray(out, np.int32)
+
+    def _chunks(self, ids: np.ndarray, payload: Optional[np.ndarray] = None):
+        """Yield (slots[mb], payload[mb, d]|None, valid[mb]) padded chunks."""
+        mb = self.mutation_batch
+        d = self.graph.items.shape[1]
+        for i in range(0, len(ids), mb):
+            part = ids[i:i + mb]
+            slots = np.zeros(mb, np.int32)
+            slots[:len(part)] = part
+            valid = np.zeros(mb, bool)
+            valid[:len(part)] = True
+            if payload is None:
+                yield jnp.asarray(slots), None, jnp.asarray(valid)
+            else:
+                pay = np.zeros((mb, d), np.float32)
+                pay[:len(part)] = payload[i:i + mb]
+                yield jnp.asarray(slots), jnp.asarray(pay), jnp.asarray(valid)
+
+    # -- mutations ---------------------------------------------------------
+
+    def upsert(self, new_items) -> np.ndarray:
+        """Insert (or replace, via slot reuse) a batch of items; returns the
+        slot ids assigned, in payload order."""
+        new_items = np.asarray(new_items, np.float32)
+        if new_items.ndim != 2 or new_items.shape[1] != self.graph.items.shape[1]:
+            raise ValueError(
+                f"upsert payload must be [b, {self.graph.items.shape[1]}], "
+                f"got {new_items.shape}"
+            )
+        slots = self._allocate(new_items.shape[0])
+        idx = self.index
+        knobs = dict(
+            max_degree=idx.max_degree,
+            ef=idx.ef_construction,
+            max_steps=2 * idx.ef_construction,
+            backend=idx.backend,
+            commit_backend=idx.commit_backend,
+            commit_tile=self._commit_tile,
+            reverse_links=idx.reverse_links,
+        )
+        for cslots, pay, valid in self._chunks(slots, new_items):
+            if self.plus:
+                ag, ig = idx.ang_graph, idx.ip_graph
+                (a_adj, a_size, a_entry, a_enorm,
+                 i_adj, i_size, i_entry, i_enorm,
+                 items, ang_items, self.norms, self.live) = _upsert_plus_arrays(
+                    ag.adj, ig.adj, ig.items, ag.items, self.norms, self.live,
+                    ag.size, ag.entry, ag.entry_norm,
+                    ig.size, ig.entry, ig.entry_norm,
+                    cslots, pay, valid,
+                    ang_degree=idx.ang_degree, ang_ef=idx.ang_ef,
+                    ang_max_steps=2 * max(idx.ang_ef, idx.ang_degree),
+                    k_angular=idx.k_angular, **knobs,
+                )
+                idx.ang_graph = GraphIndex(a_adj, ang_items, a_size,
+                                           a_entry, a_enorm)
+                idx.ip_graph = GraphIndex(i_adj, items, i_size,
+                                          i_entry, i_enorm)
+                self._sync_store_rows(cslots, pay, normalize(pay), valid)
+            else:
+                g = idx.graph
+                (adj, size, entry, enorm,
+                 items, self.norms, self.live) = _upsert_arrays(
+                    g.adj, g.items, self.norms, self.live,
+                    g.size, g.entry, g.entry_norm,
+                    cslots, pay, valid, **knobs,
+                )
+                idx.graph = GraphIndex(adj, items, size, entry, enorm)
+                self._sync_store_rows(cslots, pay, None, valid)
+        self._live_host[slots] = True
+        self.mutation_count += 1
+        return slots
+
+    def delete(self, ids) -> None:
+        """Tombstone a batch of live slots.  The rows stay in the graph as
+        routing vertices; searches stop returning them immediately."""
+        ids = np.unique(np.asarray(ids, np.int32).ravel())
+        if ids.size == 0:
+            return
+        if ids.min() < 0 or ids.max() >= self._next_fresh:
+            raise ValueError(
+                f"delete ids must be used slots in [0, {self._next_fresh}), "
+                f"got range [{ids.min()}, {ids.max()}]"
+            )
+        dead = ids[~self._live_host[ids]]
+        if dead.size:
+            raise ValueError(f"slots already tombstoned: {dead.tolist()}")
+        if int(self._live_host.sum()) - ids.size < 1:
+            raise RuntimeError("delete would tombstone the entire catalog")
+        for cids, _, valid in self._chunks(ids):
+            ip = self.graph
+            self.live, entry, enorm, moved = _delete_arrays(
+                self.live, self.norms, ip.entry, ip.entry_norm, cids, valid,
+            )
+            if self.plus:
+                self.index.ip_graph = ip._replace(entry=entry,
+                                                  entry_norm=enorm)
+                if bool(moved):
+                    # The angular entry only needs to be SOME live vertex;
+                    # reuse the ip re-seat (all angular norms are 1.0).
+                    self.index.ang_graph = self.index.ang_graph._replace(
+                        entry=entry,
+                        entry_norm=jnp.ones((), jnp.float32),
+                    )
+            else:
+                self.index.graph = ip._replace(entry=entry, entry_norm=enorm)
+        self._live_host[ids] = False
+        self._free.extend(ids.tolist())
+        self.mutation_count += 1
+
+    def kill_hubs(self, k: int) -> np.ndarray:
+        """Adversarial fault injection: tombstone the k live nodes with the
+        highest in-degree — the §4 hubs whose loss hurts navigability most.
+        Never kills the last live node; returns the ids killed."""
+        indeg = in_degrees(self.graph)
+        indeg = np.where(self._live_host[:len(indeg)], indeg, -1)
+        k = min(int(k), max(int(self._live_host.sum()) - 1, 0))
+        if k <= 0:
+            return np.asarray([], np.int32)
+        order = np.lexsort((np.arange(len(indeg)), -indeg))  # ties -> low id
+        ids = np.asarray(order[:k], np.int32)
+        self.delete(ids)
+        return ids
+
+    # -- repair ------------------------------------------------------------
+
+    def _relink_candidates(self) -> np.ndarray:
+        """Live used rows ordered worst-first by dead-out-edge fraction
+        (ties by id), cut at ``relink_threshold``."""
+        size = self.size
+        adj = np.asarray(self.graph.adj)[:size]
+        live = self._live_host
+        edge = (adj >= 0) & live[:size, None]
+        n_edges = edge.sum(axis=1)
+        dead = (edge & ~live[np.maximum(adj, 0)]).sum(axis=1)
+        frac = np.where(n_edges > 0, dead / np.maximum(n_edges, 1), 0.0)
+        cand = np.flatnonzero(frac >= self.relink_threshold)
+        return cand[np.lexsort((cand, -frac[cand]))].astype(np.int32)
+
+    def relink_debt(self) -> int:
+        """Nodes currently above the repair threshold."""
+        return int(len(self._relink_candidates()))
+
+    def relink(self, budget: int) -> int:
+        """Repair up to ``budget`` of the worst rotted live nodes; returns
+        how many were relinked.  Call repeatedly (or with a large budget)
+        until ``relink_debt() == 0`` for a full repair."""
+        todo = self._relink_candidates()[:max(int(budget), 0)]
+        if todo.size == 0:
+            return 0
+        idx = self.index
+        knobs = dict(
+            max_degree=idx.max_degree,
+            ef=idx.ef_construction,
+            max_steps=2 * idx.ef_construction,
+            backend=idx.backend,
+            commit_backend=idx.commit_backend,
+            commit_tile=self._commit_tile,
+            reverse_links=idx.reverse_links,
+        )
+        for cslots, _, valid in self._chunks(todo):
+            if self.plus:
+                ag, ig = idx.ang_graph, idx.ip_graph
+                (a_adj, a_size, a_entry, a_enorm,
+                 i_adj, i_size, i_entry, i_enorm) = _relink_plus_arrays(
+                    ag.adj, ig.adj, ig.items, ag.items, self.norms, self.live,
+                    ag.size, ag.entry, ag.entry_norm,
+                    ig.size, ig.entry, ig.entry_norm,
+                    cslots, valid,
+                    ang_degree=idx.ang_degree, ang_ef=idx.ang_ef,
+                    ang_max_steps=2 * max(idx.ang_ef, idx.ang_degree),
+                    k_angular=idx.k_angular, **knobs,
+                )
+                idx.ang_graph = GraphIndex(a_adj, ag.items, a_size,
+                                           a_entry, a_enorm)
+                idx.ip_graph = GraphIndex(i_adj, ig.items, i_size,
+                                          i_entry, i_enorm)
+            else:
+                g = idx.graph
+                adj, size, entry, enorm = _relink_arrays(
+                    g.adj, g.items, self.norms, self.live,
+                    g.size, g.entry, g.entry_norm, cslots, valid, **knobs,
+                )
+                idx.graph = GraphIndex(adj, g.items, size, entry, enorm)
+        self.mutation_count += 1
+        return int(todo.size)
+
+    # -- observability -----------------------------------------------------
+
+    def health(self) -> Dict[str, float]:
+        """Churn-health counters (surfaced in ServeStats during serving)."""
+        size = max(self.size, 1)
+        live_n = int(self._live_host.sum())
+        fracs = [dead_edge_fraction(np.asarray(self.graph.adj),
+                                    self._live_host, self.size)]
+        if self.plus:
+            fracs.append(dead_edge_fraction(
+                np.asarray(self.index.ang_graph.adj),
+                self._live_host, self.size))
+        return {
+            "live_fraction": live_n / size,
+            "tombstone_ratio": 1.0 - live_n / size,
+            "dead_edge_frac": float(max(fracs)),
+            "relink_debt": float(self.relink_debt()),
+        }
+
+    def check_invariants(self, max_dead_edge_frac: float = 1.0) -> List[str]:
+        """Run core/invariants.py over every graph; returns violations."""
+        errs = check_graph_invariants(
+            self.graph, self._live_host,
+            max_dead_edge_frac=max_dead_edge_frac,
+            name="ip" if self.plus else "graph",
+        )
+        if self.plus:
+            errs += check_graph_invariants(
+                self.index.ang_graph, self._live_host,
+                max_dead_edge_frac=max_dead_edge_frac, name="ang",
+            )
+        return errs
+
+    # -- search ------------------------------------------------------------
+
+    def search(self, queries, **kwargs):
+        """Delegate to the wrapped index with the tombstone mask attached."""
+        return self.index.search(queries, live=self.live, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Churn / fault-injection traces
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ChurnEvent:
+    """One timed mutation.  ``kind``:
+      "upsert"   — insert ``items`` ([b, d] payload baked into the trace)
+      "delete"   — tombstone ``count`` uniformly-chosen live slots
+                   (selection rng seeded with ``seed`` at APPLY time, so a
+                   replay against the same state sequence is deterministic)
+      "hub_kill" — tombstone the ``count`` highest-in-degree live nodes
+      "relink"   — run a repair pass with budget ``count``
+    """
+
+    t: float
+    kind: str
+    items: Optional[np.ndarray] = None
+    count: int = 0
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ChurnTrace:
+    """A seeded, fully materialized churn schedule (pure function of its
+    generation arguments — no wall clock, no global rng)."""
+
+    events: Tuple[ChurnEvent, ...]
+
+    @property
+    def n_events(self) -> int:
+        return len(self.events)
+
+    @staticmethod
+    def generate(
+        *,
+        n_items: int,
+        dim: int,
+        duration_s: float,
+        turnover: float = 0.2,
+        batch: int = 32,
+        seed: int = 0,
+        profile: str = "gaussian",
+        hub_kill_at: Optional[float] = None,
+        hub_kill_k: int = 0,
+        relink_every: Optional[float] = None,
+        relink_budget: int = 0,
+        start_t: float = 0.0,
+    ) -> "ChurnTrace":
+        """``turnover`` is the catalog fraction both UPSERTED and DELETED
+        over ``duration_s`` (0.2 → 20% of slots replaced), emitted as
+        alternating upsert/delete batches of ``batch`` evenly spaced over
+        the window.  ``hub_kill_at`` injects one adversarial hub-kill of
+        ``hub_kill_k`` nodes at that offset; ``relink_every`` schedules
+        periodic repair passes of ``relink_budget`` nodes."""
+        from repro.data import mips_dataset
+
+        rng = np.random.default_rng(seed)
+        n_mut = max(int(round(turnover * n_items / max(batch, 1))), 1)
+        events: List[ChurnEvent] = []
+        span = duration_s / max(2 * n_mut, 1)
+        t = start_t
+        for i in range(n_mut):
+            # Delete-before-upsert keeps the net live count flat and lets
+            # the upsert reuse the slots the delete just freed.
+            t += span
+            events.append(ChurnEvent(
+                t=t, kind="delete", count=batch,
+                seed=int(rng.integers(0, 2**31 - 1)),
+            ))
+            t += span
+            payload = mips_dataset(
+                batch, dim, profile, seed=int(rng.integers(0, 2**31 - 1)),
+            )
+            events.append(ChurnEvent(t=t, kind="upsert", items=payload))
+        if hub_kill_at is not None and hub_kill_k > 0:
+            events.append(ChurnEvent(
+                t=start_t + hub_kill_at, kind="hub_kill", count=hub_kill_k,
+            ))
+        if relink_every is not None and relink_budget > 0:
+            t = start_t + relink_every
+            while t < start_t + duration_s + 1e-9:
+                events.append(ChurnEvent(
+                    t=t, kind="relink", count=relink_budget,
+                ))
+                t += relink_every
+        events.sort(key=lambda e: (e.t, e.kind))
+        return ChurnTrace(events=tuple(events))
+
+
+def apply_churn_event(m: MutableIndex, ev: ChurnEvent) -> Dict[str, float]:
+    """Apply one event; returns a small summary dict (for logging/stats)."""
+    if ev.kind == "upsert":
+        slots = m.upsert(ev.items)
+        return {"kind": ev.kind, "n": int(len(slots))}
+    if ev.kind == "delete":
+        rng = np.random.default_rng(ev.seed)
+        pool = m.live_ids()
+        n = min(int(ev.count), len(pool) - 1)
+        if n <= 0:
+            return {"kind": ev.kind, "n": 0}
+        ids = rng.choice(pool, size=n, replace=False)
+        m.delete(ids)
+        return {"kind": ev.kind, "n": n}
+    if ev.kind == "hub_kill":
+        ids = m.kill_hubs(ev.count)
+        return {"kind": ev.kind, "n": int(len(ids))}
+    if ev.kind == "relink":
+        n = m.relink(ev.count)
+        return {"kind": ev.kind, "n": n}
+    raise ValueError(f"unknown churn event kind {ev.kind!r}")

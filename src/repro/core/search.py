@@ -62,6 +62,8 @@ class SearchResult(NamedTuple):
     evals: jax.Array    # [B] int32 similarity-evaluation counts
     steps: jax.Array    # [] int32 loop iterations executed
     visited: jax.Array  # [B, V] int32 every scored id (-1 padded), Fig-5 data
+    dead_evals: Optional[jax.Array] = None  # [B] int32 evaluations spent on
+    #   tombstoned nodes (mutation churn-health signal; None without live=)
 
 
 class _State(NamedTuple):
@@ -70,6 +72,7 @@ class _State(NamedTuple):
     pool_checked: jax.Array  # [B, L] bool
     visited: jax.Array       # [B, V]
     evals: jax.Array         # [B]
+    dead_evals: jax.Array    # [B]
     done: jax.Array          # [B] bool
     step: jax.Array          # []
 
@@ -94,6 +97,7 @@ def make_step_fn(
     score_fn=gather_scores,
     interpret: Optional[bool] = None,
     store: Optional[ItemStore] = None,
+    live: Optional[jax.Array] = None,
 ):
     """Resolve ``backend`` to a step function over the per-query walk state:
 
@@ -106,6 +110,9 @@ def make_step_fn(
     With ``store`` given (the int8 storage backend), steps score against the
     quantized codes instead of ``items`` — via ``quant_score_ref`` on the
     reference path and the kernel's int8 row-gather path on pallas.
+    With ``live`` given (the mutation layer's tombstone mask, DESIGN.md §9),
+    both backends additionally count per-step tombstone evaluations
+    (``StepResult.n_dead``); traversal itself is mask-blind.
     """
     # Deferred import: kernels.beam_step.ref reuses core.similarity, so a
     # module-level import here would be circular through core/__init__.
@@ -117,7 +124,7 @@ def make_step_fn(
         def step_fn(pool_ids, pool_scores, pool_checked, visited, done):
             return beam_step_ref(
                 pool_ids, pool_scores, pool_checked, visited, done,
-                queries, adj, items, score_fn=step_score_fn,
+                queries, adj, items, score_fn=step_score_fn, live=live,
             )
 
         return step_fn
@@ -147,10 +154,12 @@ def make_step_fn(
             x_pad = jnp.pad(store.codes.astype(jnp.int8), ((0, 0), (0, dp - d)))
             scales = store.scales
 
+        live_col = None if live is None else live.astype(jnp.int32)
+
         def step_fn(pool_ids, pool_scores, pool_checked, visited, done):
             return beam_step(
                 pool_ids, pool_scores, pool_checked, visited, done,
-                q_pad, adj, x_pad, scales, interpret=interpret,
+                q_pad, adj, x_pad, scales, live_col, interpret=interpret,
             )
 
         return step_fn
@@ -182,6 +191,7 @@ def beam_search(
     storage: str = "f32",
     store: Optional[ItemStore] = None,
     valid: Optional[jax.Array] = None,
+    live: Optional[jax.Array] = None,
 ) -> SearchResult:
     """Run the batched walk.
 
@@ -207,6 +217,16 @@ def beam_search(
               same query in a batch of any other size (the
               padding-equivalence pin in tests/test_serve_loop.py).  Pad
               query rows are ignored but must hold finite values.
+    live:     optional [N] bool — the mutation layer's tombstone mask
+              (core/mutation.py, DESIGN.md §9).  Walks traverse THROUGH dead
+              nodes (they keep their true scores in the pool and their
+              adjacency rows keep routing — tombstoning the large-norm hubs
+              must not sever navigability), but dead ids are masked out of
+              the final top-k cut, so they are never returned.  Both step
+              backends also count tombstone evaluations into
+              ``SearchResult.dead_evals``.  ``None`` (the default) is the
+              frozen-index fast path: bit-identical to the pre-mutation
+              behavior, no extra gathers.
     """
     # Validate eagerly, before seeding does any work: a typo'd backend must
     # not survive until make_step_fn resolves it mid-trace (by which point a
@@ -239,6 +259,9 @@ def beam_search(
     L = pool_size
     V = S + max_steps * M  # visited capacity — exact, no clipping needed
 
+    if live is not None:
+        live = live.astype(bool)
+
     init_ids = _dedup_ids(init_ids)
     if valid is not None:
         # Pad rows lose their seeds entirely: all-(-1) seeds give an
@@ -250,6 +273,11 @@ def beam_search(
         valid0, walk_score_fn(queries, items, init_ids), NEG_INF
     )
     evals0 = valid0.sum(axis=-1).astype(jnp.int32)
+    if live is None:
+        dead0 = jnp.zeros_like(evals0)
+    else:
+        dead0 = (valid0 & ~live[jnp.maximum(init_ids, 0)]).sum(
+            axis=-1).astype(jnp.int32)
 
     # Seed pool = top-L of the seeds (sorted desc; empty slots are checked).
     top0, idx0 = jax.lax.top_k(scores0, min(L, S))
@@ -271,6 +299,7 @@ def beam_search(
         pool_checked=pool_checked,
         visited=visited,
         evals=evals0,
+        dead_evals=dead0,
         done=(jnp.zeros((B,), bool) if valid is None
               else ~valid.astype(bool)),
         step=jnp.zeros((), jnp.int32),
@@ -278,7 +307,7 @@ def beam_search(
 
     step_fn = make_step_fn(
         backend, queries, adj, items, score_fn=score_fn, interpret=interpret,
-        store=store,
+        store=store, live=live,
     )
 
     def cond(st: _State):
@@ -290,17 +319,20 @@ def beam_search(
         visited = jax.lax.dynamic_update_slice(
             st.visited, res.nbr_ids, (0, S + st.step * M)
         )
+        n_dead = res.n_dead if res.n_dead is not None else 0
         return _State(
             pool_ids=res.pool_ids,
             pool_scores=res.pool_scores,
             pool_checked=res.pool_checked,
             visited=visited,
             evals=st.evals + res.n_scored,
+            dead_evals=st.dead_evals + n_dead,
             done=res.done,
             step=st.step + 1,
         )
 
     final = jax.lax.while_loop(cond, body, state)
+    dead_evals = final.dead_evals if live is not None else None
 
     if store is not None:
         # Exact fp32 rerank of the final ef-pool (asymmetric refine,
@@ -312,8 +344,13 @@ def beam_search(
         # counts (the paper's Fig-5/8a metric counts pool insertions, and
         # the rerank re-scores rows the walk already evaluated).
         pool_ids = final.pool_ids
+        keep = pool_ids >= 0
+        if live is not None:
+            # Tombstones routed the walk but may not be returned: fold the
+            # live gather into the rerank's existing mask.
+            keep &= live[jnp.maximum(pool_ids, 0)]
         exact = jnp.where(
-            pool_ids >= 0, score_fn(queries, items, pool_ids), NEG_INF
+            keep, score_fn(queries, items, pool_ids), NEG_INF
         )
         vals, sel = jax.lax.top_k(exact, k)
         ids = jnp.take_along_axis(pool_ids, sel, axis=-1)
@@ -323,6 +360,27 @@ def beam_search(
             evals=final.evals,
             steps=final.step,
             visited=final.visited,
+            dead_evals=dead_evals,
+        )
+
+    if live is not None:
+        # f32 path with tombstones: the pool is sorted desc, so a masked
+        # top-k (stable for ties — top_k prefers the lower index) returns
+        # the best k LIVE pool entries in their existing order.  The
+        # live=None branch below stays the untouched pre-mutation slice, so
+        # frozen indexes keep their pinned bit-exact behavior.
+        pool_ids = final.pool_ids
+        keep = (pool_ids >= 0) & live[jnp.maximum(pool_ids, 0)]
+        masked = jnp.where(keep, final.pool_scores, NEG_INF)
+        vals, sel = jax.lax.top_k(masked, k)
+        ids = jnp.take_along_axis(pool_ids, sel, axis=-1)
+        return SearchResult(
+            ids=jnp.where(vals > NEG_INF, ids, -1),
+            scores=vals,
+            evals=final.evals,
+            steps=final.step,
+            visited=final.visited,
+            dead_evals=dead_evals,
         )
 
     return SearchResult(

@@ -97,6 +97,24 @@ def make_store(items: jax.Array, storage: str) -> Optional[ItemStore]:
     return quantize_items(items)
 
 
+def update_store_rows(
+    store: ItemStore, rows: jax.Array, new_items: jax.Array
+) -> ItemStore:
+    """Requantize a batch of rows in place (mutation-layer upsert sync).
+
+    ``rows`` may contain out-of-range ids (the mutation layer's pad-row
+    convention, ``rows == N``) — those scatter-drop, mirroring how the
+    fp32 item updates drop them.  Deliberately NOT jitted: fusing the
+    max/divide of ``quantize_items`` changes its rounding by one ULP, and
+    the mutation layer pins the synced store bit-identical to an eager
+    from-scratch requantization (tests/test_mutation.py)."""
+    part = quantize_items(new_items)
+    return ItemStore(
+        codes=store.codes.at[rows].set(part.codes, mode="drop"),
+        scales=store.scales.at[rows].set(part.scales, mode="drop"),
+    )
+
+
 def store_scores(
     queries: jax.Array, store: ItemStore, ids: jax.Array
 ) -> jax.Array:

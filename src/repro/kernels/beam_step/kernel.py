@@ -54,17 +54,27 @@ def _beam_step_kernel(
     l: int,
     m: int,
     quantized: bool = False,
+    has_live: bool = False,
 ):
     # The int8 storage backend (DESIGN.md §8) adds one HBM input (the [N, 1]
     # per-row dequant scales) and one VMEM scratch (the gathered scales);
     # ``items_hbm`` then holds the 1-byte codes and ``rows_ref`` is int8.
-    if quantized:
-        (scl_hbm, oi_ref, os_ref, oc_ref, onb_ref, odn_ref, onv_ref,
-         adj_smem, adj_vmem, rows_ref, scl_ref, sems) = rest
-    else:
-        scl_hbm = scl_ref = None
-        (oi_ref, os_ref, oc_ref, onb_ref, odn_ref, onv_ref,
-         adj_smem, adj_vmem, rows_ref, sems) = rest
+    # The mutation layer (DESIGN.md §9) adds the [N, 1] live column and its
+    # gathered-bits scratch the same way — the two ride the identical
+    # per-neighbor scalar-DMA pattern, so their layouts compose freely.
+    rest = list(rest)
+    scl_hbm = rest.pop(0) if quantized else None
+    live_hbm = rest.pop(0) if has_live else None
+    (oi_ref, os_ref, oc_ref, onb_ref, odn_ref, onv_ref, ond_ref,
+     adj_smem, adj_vmem, rows_ref) = rest[:10]
+    rest = rest[10:]
+    scl_ref = rest.pop(0) if quantized else None
+    live_ref = rest.pop(0) if has_live else None
+    (sems,) = rest
+    # Per-neighbor DMA semaphore bases: rows at 0..m-1, adjacency at m/m+1,
+    # then one contiguous block per optional column in operand order.
+    scl_base = m + 2
+    live_base = m + 2 + (m if quantized else 0)
     pool_ids = pi_ref[...]                 # [1, L] int32
     pool_scores = ps_ref[...]              # [1, L] fp32
     pool_checked = pc_ref[...] != 0        # [1, L] bool
@@ -112,15 +122,26 @@ def _beam_step_kernel(
             nid = jnp.maximum(adj_smem[0, j], 0)
             return pltpu.make_async_copy(
                 scl_hbm.at[pl.ds(nid, 1), :], scl_ref.at[:, pl.ds(j, 1)],
-                sems.at[m + 2 + j],
+                sems.at[scl_base + j],
+            )
+
+        def _live_copy(j):
+            nid = jnp.maximum(adj_smem[0, j], 0)
+            return pltpu.make_async_copy(
+                live_hbm.at[pl.ds(nid, 1), :], live_ref.at[:, pl.ds(j, 1)],
+                sems.at[live_base + j],
             )
 
         jax.lax.fori_loop(0, m, lambda j, c: (_row_copy(j).start(), c)[1], 0)
         if quantized:
             jax.lax.fori_loop(0, m, lambda j, c: (_scl_copy(j).start(), c)[1], 0)
+        if has_live:
+            jax.lax.fori_loop(0, m, lambda j, c: (_live_copy(j).start(), c)[1], 0)
         jax.lax.fori_loop(0, m, lambda j, c: (_row_copy(j).wait(), c)[1], 0)
         if quantized:
             jax.lax.fori_loop(0, m, lambda j, c: (_scl_copy(j).wait(), c)[1], 0)
+        if has_live:
+            jax.lax.fori_loop(0, m, lambda j, c: (_live_copy(j).wait(), c)[1], 0)
 
     # --- 4. dedup-mask, score, merge — all in VMEM --------------------------
     nbrs = adj_vmem[...]                   # [1, M] int32
@@ -154,6 +175,14 @@ def _beam_step_kernel(
     onb_ref[...] = nbr_ids
     odn_ref[0, 0] = done.astype(jnp.int32)
     onv_ref[0, 0] = jnp.sum(valid.astype(jnp.int32))
+    if has_live:
+        # Tombstoned evaluations: valid neighbors whose live bit is 0.  Like
+        # the scales, live bits of done queries are uninitialized scratch —
+        # masked out because ``valid`` is all-False when ``upd`` is.
+        dead = valid & (live_ref[...] == 0)
+        ond_ref[0, 0] = jnp.sum(dead.astype(jnp.int32))
+    else:
+        ond_ref[0, 0] = jnp.int32(0)
 
 
 def beam_step_pallas(
@@ -166,22 +195,30 @@ def beam_step_pallas(
     adj: jax.Array,           # [N, M] int32 (-1 padded)
     items: jax.Array,         # [N, dp] fp32 items — or int8 codes (quantized)
     scales: "jax.Array | None" = None,  # [N, 1] fp32 dequant scales (int8)
+    live: "jax.Array | None" = None,    # [N, 1] int32 0/1 tombstone mask
     *,
     interpret: bool = True,
 ):
     """One fused Algorithm-1 iteration for every query.  Returns
-    (pool_ids, pool_scores, pool_checked, nbr_ids, done, n_scored) with the
-    pool sorted desc and ids bit-identical to beam_step_ref.
+    (pool_ids, pool_scores, pool_checked, nbr_ids, done, n_scored, n_dead)
+    with the pool sorted desc and ids bit-identical to beam_step_ref.
 
     With ``scales`` given, ``items`` holds the int8 store's codes: neighbor
     rows DMA as 1-byte elements and scores are ``(q . codes) * scale``
     (DESIGN.md §8) — bit-identical to ``beam_step_ref`` walking the same
-    store through ``quant_score_ref``."""
+    store through ``quant_score_ref``.
+
+    With ``live`` given (core/mutation.py's tombstone column), neighbor live
+    bits ride the same per-neighbor scalar DMA and ``n_dead`` counts the
+    evaluations spent on tombstones; scores/merges are unchanged — dead nodes
+    stay traversable and are filtered from results by the caller.  Without it
+    ``n_dead`` is all zeros."""
     b, l = pool_ids.shape
     v = visited.shape[1]
     dp = queries.shape[1]
     m = adj.shape[1]
     quantized = scales is not None
+    has_live = live is not None
 
     spec_l = pl.BlockSpec((1, l), lambda i: (i, 0))
     spec_1 = pl.BlockSpec((1, 1), lambda i: (i, 0))
@@ -208,24 +245,29 @@ def beam_step_pallas(
         in_specs.append(spec_any)                 # scales column (HBM)
         operands.append(scales)
         scratch.append(pltpu.VMEM((1, m), jnp.float32))   # gathered scales
-        scratch.append(pltpu.SemaphoreType.DMA((2 * m + 2,)))
-    else:
-        scratch.append(pltpu.SemaphoreType.DMA((m + 2,)))
+    if has_live:
+        in_specs.append(spec_any)                 # live column (HBM)
+        operands.append(live)
+        scratch.append(pltpu.VMEM((1, m), jnp.int32))     # gathered live bits
+    n_sems = m + 2 + (m if quantized else 0) + (m if has_live else 0)
+    scratch.append(pltpu.SemaphoreType.DMA((n_sems,)))
 
     return pl.pallas_call(
-        functools.partial(_beam_step_kernel, l=l, m=m, quantized=quantized),
+        functools.partial(_beam_step_kernel, l=l, m=m, quantized=quantized,
+                          has_live=has_live),
         grid=(b,),
         in_specs=in_specs,
         out_specs=(
             spec_l, spec_l, spec_l,
             pl.BlockSpec((1, m), lambda i: (i, 0)),
-            spec_1, spec_1,
+            spec_1, spec_1, spec_1,
         ),
         out_shape=(
             jax.ShapeDtypeStruct((b, l), jnp.int32),
             jax.ShapeDtypeStruct((b, l), jnp.float32),
             jax.ShapeDtypeStruct((b, l), jnp.int32),
             jax.ShapeDtypeStruct((b, m), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
             jax.ShapeDtypeStruct((b, 1), jnp.int32),
             jax.ShapeDtypeStruct((b, 1), jnp.int32),
         ),

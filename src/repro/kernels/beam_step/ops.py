@@ -33,6 +33,7 @@ def beam_step(
     adj: jax.Array,           # [N, M] int32
     items: jax.Array,         # [N, d] fp32 items — or int8 codes (quantized)
     scales: "jax.Array | None" = None,  # [N] fp32 per-row scales (int8 store)
+    live: "jax.Array | None" = None,    # [N] bool/int tombstone mask
     *,
     interpret: bool = True,
 ) -> StepResult:
@@ -41,7 +42,11 @@ def beam_step(
     With ``scales`` given, ``items`` is the int8 store's code matrix and the
     step scores are the quantized convention ``(q . codes) * scale``
     (DESIGN.md §8).  Zero-padding the int8 code axis keeps the fp32 dot of
-    the cast codes bit-identical, same as the fp32 rule above."""
+    the cast codes bit-identical, same as the fp32 rule above.
+
+    With ``live`` given (the mutation layer's tombstone mask, DESIGN.md §9),
+    ``n_dead`` counts this step's evaluations that landed on tombstones;
+    pool contents are unchanged — dead nodes stay traversable."""
     d = queries.shape[-1]
     dp = _round_up(d, 128)
     q = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, dp - d)))
@@ -51,7 +56,8 @@ def beam_step(
     else:
         x = jnp.pad(items.astype(jnp.int8), ((0, 0), (0, dp - d)))
         scl = scales.reshape(-1, 1).astype(jnp.float32)
-    oi, os, oc, onb, odn, onv = beam_step_pallas(
+    lv = None if live is None else live.reshape(-1, 1).astype(jnp.int32)
+    oi, os, oc, onb, odn, onv, ond = beam_step_pallas(
         pool_ids.astype(jnp.int32),
         pool_scores.astype(jnp.float32),
         pool_checked.astype(jnp.int32),
@@ -61,6 +67,7 @@ def beam_step(
         adj.astype(jnp.int32),
         x,
         scl,
+        lv,
         interpret=interpret,
     )
     return StepResult(
@@ -70,4 +77,5 @@ def beam_step(
         nbr_ids=onb,
         done=odn[:, 0] != 0,
         n_scored=onv[:, 0],
+        n_dead=ond[:, 0],
     )

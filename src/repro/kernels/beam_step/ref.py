@@ -7,7 +7,7 @@ path cannot drift apart.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +30,8 @@ class StepResult(NamedTuple):
     nbr_ids: jax.Array       # [B, M] int32 newly-scored ids (-1 masked)
     done: jax.Array          # [B] bool (sticky)
     n_scored: jax.Array      # [B] int32 similarity evaluations this step
+    n_dead: Optional[jax.Array] = None  # [B] int32 tombstoned evaluations
+    #   (None when the walk carries no live mask — mutation off)
 
 
 def beam_step_ref(
@@ -43,9 +45,19 @@ def beam_step_ref(
     items: jax.Array,
     *,
     score_fn=gather_scores,
+    live: Optional[jax.Array] = None,
 ) -> StepResult:
     """Select the best unchecked pool slot, expand its adjacency row, mask
-    visited/invalid neighbors, score the rest, and merge into the pool."""
+    visited/invalid neighbors, score the rest, and merge into the pool.
+
+    ``live`` ([N] bool, core/mutation.py's tombstone mask) does NOT change
+    which neighbors are scored or merged — dead nodes stay traversable
+    routing vertices (they are the large-norm highways of the paper's §4
+    hub analysis, and cutting them would sever navigability exactly when
+    churn hits hardest).  The mask's only effect here is the ``n_dead``
+    count: evaluations spent on tombstones, the churn-health signal
+    ``beam_search`` accumulates into ``SearchResult.dead_evals``.  Dead
+    nodes are excluded from RESULTS at the final cut in ``beam_search``."""
     B, L = pool_ids.shape
     rows = jnp.arange(B)
 
@@ -72,6 +84,11 @@ def beam_step_ref(
     nbr_scores = jnp.where(valid, nbr_scores, NEG_INF)
     nbr_ids = jnp.where(valid, nbrs, -1).astype(jnp.int32)
     n_scored = valid.sum(axis=-1).astype(jnp.int32)
+    if live is None:
+        n_dead = jnp.zeros_like(n_scored)
+    else:
+        dead = valid & ~live.astype(bool)[jnp.maximum(nbrs, 0)]
+        n_dead = dead.sum(axis=-1).astype(jnp.int32)
 
     cand_ids = jnp.concatenate([pool_ids, nbr_ids], axis=-1)
     cand_scores = jnp.concatenate([pool_scores, nbr_scores], axis=-1)
@@ -88,4 +105,5 @@ def beam_step_ref(
         nbr_ids=nbr_ids,
         done=new_done,
         n_scored=n_scored,
+        n_dead=n_dead,
     )

@@ -78,6 +78,15 @@ def main():
                     help="loop mode Poisson arrival rate (QPS)")
     ap.add_argument("--requests", type=int, default=256,
                     help="loop mode trace length")
+    ap.add_argument("--churn-trace", type=float, default=0.0, metavar="FRAC",
+                    help="loop mode: wrap the index in a MutableIndex and "
+                         "replay a seeded churn trace turning over FRAC of "
+                         "the catalog (upserts + tombstone deletes + one "
+                         "hub-kill) interleaved with the query traffic "
+                         "(core/mutation.py)")
+    ap.add_argument("--relink-budget", type=int, default=64,
+                    help="nodes repaired per scheduled relink pass of the "
+                         "churn trace (0 disables periodic repair)")
     args = ap.parse_args()
 
     compile_events0 = sl.xla_compile_events()
@@ -184,10 +193,23 @@ def _run_loop(args, items, compile_events0: int) -> None:
         queries, rate_qps=args.rate, seed=2, ef=args.ef,
         classes=("interactive", "standard", "relaxed"),
     )
+    churn = None
+    if args.churn_trace > 0:
+        from repro.core import ChurnTrace, MutableIndex
+
+        index = MutableIndex(index, capacity=int(args.n_items * 1.25))
+        dur = max(r.arrival_t for r in trace) + 1e-3
+        churn = ChurnTrace.generate(
+            n_items=args.n_items, dim=args.dim, duration_s=dur,
+            turnover=args.churn_trace, batch=32, seed=3,
+            profile=args.profile, hub_kill_at=dur / 2, hub_kill_k=8,
+            relink_every=dur / 4 if args.relink_budget else None,
+            relink_budget=args.relink_budget,
+        )
     clock = sl.VirtualClock() if args.clock == "virtual" else sl.WallClock()
     loop = sl.ServeLoop(index, ladder=ladder, clock=clock, k=args.k,
                         service_model=sl.LinearServiceModel())
-    stats = loop.run(trace)
+    stats = loop.run(trace, churn=churn)
 
     by_rid = sorted(stats.responses, key=lambda r: r.rid)
     rec = recall_at_k(np.stack([r.ids for r in by_rid]), gt)
@@ -203,6 +225,12 @@ def _run_loop(args, items, compile_events0: int) -> None:
           f"recompiles(warmup/steady)={s['recompiles_warmup']}"
           f"/{s['recompiles_steady']} "
           f"xla_compiles={sl.xla_compile_events() - compile_events0}")
+    if churn is not None:
+        print(f"[serve --loop] churn: events={s['mutation_events']} "
+              f"rejected={s['rejected']} "
+              f"live_frac={s['health_live_fraction']:.3f} "
+              f"dead_edge_frac={s['health_dead_edge_frac']:.3f} "
+              f"relink_debt={s['health_relink_debt']:.0f}")
     if s["recompiles_steady"]:
         raise SystemExit(
             f"bucket-ladder regression: {s['recompiles_steady']} "

@@ -38,6 +38,12 @@ parts, in dataflow order:
                    result, stamped with dispatch/finish times and the ef it
                    was actually served at.
 
+Churn: ``run(churn=)`` replays a seeded ``core.mutation.ChurnTrace``
+(upserts, tombstone deletes, adversarial hub kills, relink repair passes)
+against a ``MutableIndex``-backed executor, interleaved with query traffic —
+events apply between dispatches when the loop clock passes their timestamps,
+and ``ServeStats`` carries the post-run churn health counters.
+
 Observability: ``BucketExecutor`` counts compile-cache misses on the
 bucketed entry point (bucket shapes are fixed, so a program-build per bucket
 is exactly one XLA compile), split into warmup vs steady-state — a bucket
@@ -266,22 +272,23 @@ class LinearServiceModel:
 # --------------------------------------------------------------------------
 
 
-def _ipnsw_bucket(graph, store, queries, valid, *, k, ef, backend, storage):
+def _ipnsw_bucket(graph, store, live, queries, valid, *, k, ef, backend,
+                  storage):
     b = queries.shape[0]
     init = jnp.broadcast_to(graph.entry[None, None], (b, 1)).astype(jnp.int32)
     r = beam_search(
         graph, queries, init, pool_size=max(ef, k), max_steps=2 * ef, k=k,
-        backend=backend, storage=storage, store=store, valid=valid,
+        backend=backend, storage=storage, store=store, valid=valid, live=live,
     )
     return r.ids, r.scores, r.evals
 
 
-def _plus_bucket(ang_graph, ip_graph, ang_store, ip_store, queries, valid,
-                 *, k, ef, ang_ef, k_angular, backend, storage):
+def _plus_bucket(ang_graph, ip_graph, ang_store, ip_store, live, queries,
+                 valid, *, k, ef, ang_ef, k_angular, backend, storage):
     from repro.core.ipnsw_plus import _search_plus
 
     r = _search_plus(
-        ang_graph, ip_graph, queries, ang_store, ip_store, valid,
+        ang_graph, ip_graph, queries, ang_store, ip_store, valid, live,
         k=k, ef=ef, ang_ef=ang_ef, k_angular=k_angular,
         max_steps=2 * ef, ang_max_steps=2 * max(ang_ef, k_angular),
         backend=backend, storage=storage,
@@ -299,13 +306,26 @@ class BucketExecutor:
     (anything after — a ladder regression).  The padded query buffer is
     donated to XLA on backends that support input donation (TPU/GPU), which
     lets the runtime reuse it as scratch across dispatches.
+
+    Accepts a ``core.mutation.MutableIndex`` too: graph/store/live then
+    become per-dispatch ARGUMENTS of the jitted program rather than captured
+    constants, so churn between dispatches is picked up immediately — and
+    because mutations are in-place row updates (fixed capacity), the array
+    shapes never change and the program cache still hits (zero steady-state
+    recompiles under churn; pinned in tests/test_mutation.py).
     """
 
     def __init__(self, index, ladder: BucketLadder, *, k: int = 10,
                  donate: Optional[bool] = None):
+        from repro.core.mutation import MutableIndex
+
+        self.mutable = index if isinstance(index, MutableIndex) else None
+        if self.mutable is not None:
+            index = index.index
         if not isinstance(index, (IpNSW, IpNSWPlus)):
             raise TypeError(
-                f"BucketExecutor serves IpNSW or IpNSWPlus, got {type(index)}"
+                f"BucketExecutor serves IpNSW, IpNSWPlus or MutableIndex, "
+                f"got {type(index)}"
             )
         self.index = index
         self.ladder = ladder
@@ -313,7 +333,7 @@ class BucketExecutor:
         if donate is None:  # CPU jax logs 'donation not implemented' warnings
             donate = jax.default_backend() in ("tpu", "gpu")
         self.donate = donate
-        self._programs: Dict[Bucket, tuple] = {}
+        self._programs: Dict[Bucket, object] = {}
         self.compile_log: List[Tuple[Bucket, str]] = []
         self._steady = False
 
@@ -339,31 +359,41 @@ class BucketExecutor:
         assert g is not None, "index must be built before serving"
         return g.items.shape[1]
 
-    def _build_program(self, bucket: Bucket):
+    def _consts(self):
+        """The graph/store/live operands of the next dispatch.  For a plain
+        index these are the same arrays every call; for a MutableIndex they
+        are re-read so churn applied between dispatches is served
+        immediately (same shapes either way — the jit cache keys hold)."""
         idx = self.index
+        live = None if self.mutable is None else self.mutable.live
         if isinstance(idx, IpNSWPlus):
             if idx.storage == "int8" and idx.ip_store is None:
                 idx._make_stores(idx.storage)
-            const = (
+            return (
                 idx.ang_graph, idx.ip_graph,
                 idx.ang_store if idx.storage == "int8" else None,
                 idx.ip_store if idx.storage == "int8" else None,
+                live,
             )
+        return (idx.graph, idx._resolve_store(idx.storage), live)
+
+    def _build_program(self, bucket: Bucket):
+        idx = self.index
+        if isinstance(idx, IpNSWPlus):
             fn = functools.partial(
                 _plus_bucket, k=self.k, ef=bucket.ef, ang_ef=idx.ang_ef,
                 k_angular=idx.k_angular, backend=idx.backend,
                 storage=idx.storage,
             )
-            query_argnum = 4
+            query_argnum = 5
         else:
-            const = (idx.graph, idx._resolve_store(idx.storage))
             fn = functools.partial(
                 _ipnsw_bucket, k=self.k, ef=bucket.ef, backend=idx.backend,
                 storage=idx.storage,
             )
-            query_argnum = 2
+            query_argnum = 3
         jit_kwargs = {"donate_argnums": (query_argnum,)} if self.donate else {}
-        return jax.jit(fn, **jit_kwargs), const
+        return jax.jit(fn, **jit_kwargs)
 
     def warmup(self) -> None:
         """Compile every ladder bucket on an all-pad batch (the while_loop
@@ -380,15 +410,14 @@ class BucketExecutor:
         """Dispatch one padded bucket; returns (ids, scores, evals) as
         host arrays.  ``queries`` [bucket.batch, d] fp32 is consumed (it may
         be donated) — callers build a fresh buffer per dispatch."""
-        prog = self._programs.get(bucket)
-        if prog is None:
-            prog = self._build_program(bucket)
-            self._programs[bucket] = prog
+        fn = self._programs.get(bucket)
+        if fn is None:
+            fn = self._build_program(bucket)
+            self._programs[bucket] = fn
             self.compile_log.append(
                 (bucket, "steady" if self._steady else "warmup")
             )
-        fn, const = prog
-        ids, scores, evals = fn(*const, jnp.asarray(queries),
+        ids, scores, evals = fn(*self._consts(), jnp.asarray(queries),
                                 jnp.asarray(valid))
         return np.asarray(ids), np.asarray(scores), np.asarray(evals)
 
@@ -404,6 +433,12 @@ class ServeStats:
     batches: List[BatchRecord]
     recompiles_warmup: int
     recompiles_steady: int
+    # Churn observability (core/mutation.py; zeros/None without a churn
+    # trace).  ``rejected`` pins the never-reject contract — the loop has no
+    # rejection path, so anything nonzero is a logic regression.
+    mutation_events: int = 0
+    rejected: int = 0
+    health: Optional[Dict[str, float]] = None
 
     def latencies_ms(self) -> np.ndarray:
         return np.asarray([r.latency_s * 1e3 for r in self.responses])
@@ -430,7 +465,7 @@ class ServeStats:
         return float(np.mean([not r.deadline_met for r in self.responses]))
 
     def summary(self) -> Dict[str, float]:
-        return {
+        out = {
             "served": len(self.responses),
             "batches": len(self.batches),
             "p50_ms": self.percentile_ms(50),
@@ -440,7 +475,12 @@ class ServeStats:
             "deadline_miss_frac": self.deadline_miss_frac(),
             "recompiles_warmup": self.recompiles_warmup,
             "recompiles_steady": self.recompiles_steady,
+            "mutation_events": self.mutation_events,
+            "rejected": self.rejected,
         }
+        if self.health is not None:
+            out.update({f"health_{k}": v for k, v in self.health.items()})
+        return out
 
 
 class ServeLoop:
@@ -468,7 +508,8 @@ class ServeLoop:
 
     def __init__(self, index, *, ladder: Optional[BucketLadder] = None,
                  clock=None, k: int = 10, service_model=None,
-                 executor: Optional[BucketExecutor] = None):
+                 executor: Optional[BucketExecutor] = None,
+                 assert_invariants: bool = False):
         self.ladder = ladder if ladder is not None else BucketLadder()
         self.clock = clock if clock is not None else VirtualClock()
         self.service_model = (service_model if service_model is not None
@@ -476,6 +517,9 @@ class ServeLoop:
         self.executor = (executor if executor is not None
                          else BucketExecutor(index, self.ladder, k=k))
         self.k = self.executor.k
+        # Opt-in safety net: re-check core/invariants.py after every applied
+        # churn event (costs a host sweep per event; tests and debugging).
+        self.assert_invariants = assert_invariants
 
     # -- policy helpers ----------------------------------------------------
 
@@ -496,7 +540,32 @@ class ServeLoop:
 
     # -- the loop ----------------------------------------------------------
 
-    def run(self, requests: Iterable[Request]) -> ServeStats:
+    def _apply_churn(self, churn_q: deque, now: float, applied: List) -> None:
+        """Apply every due churn event (core/mutation.py) to the executor's
+        MutableIndex.  Mutations land between dispatches only — a batch
+        always sees a fully committed graph."""
+        m = self.executor.mutable
+        while churn_q and churn_q[0].t <= now:
+            from repro.core.mutation import apply_churn_event
+
+            ev = churn_q.popleft()
+            applied.append(apply_churn_event(m, ev))
+            if self.assert_invariants:
+                errs = m.check_invariants()
+                if errs:
+                    raise AssertionError(
+                        "graph invariants violated after churn event "
+                        f"{ev.kind!r} at t={ev.t}:\n" + "\n".join(errs)
+                    )
+
+    def run(self, requests: Iterable[Request], churn=None) -> ServeStats:
+        """``churn`` (optional) is a ``core.mutation.ChurnTrace`` — or any
+        sequence of ``ChurnEvent`` — replayed against the loop's
+        MutableIndex interleaved with query traffic: events apply when the
+        loop's clock passes their timestamps, never mid-batch, and events
+        dated past the last response are drained at the end (the trace's
+        turnover always completes).  Requires the executor to wrap a
+        MutableIndex."""
         trace = sorted(requests, key=lambda r: (r.arrival_t, r.rid))
         d = self.executor.dim()
         for r in trace:
@@ -508,6 +577,15 @@ class ServeLoop:
         if not self.executor.warmed:
             self.executor.warmup()
 
+        events = list(getattr(churn, "events", churn or ()))
+        if events and self.executor.mutable is None:
+            raise TypeError(
+                "churn traces need a MutableIndex-backed executor "
+                "(core.mutation.MutableIndex)"
+            )
+        churn_q = deque(sorted(events, key=lambda e: (e.t, e.kind)))
+        applied: List[Dict] = []
+
         pending = deque(trace)
         queue: List[Request] = []
         responses: List[Response] = []
@@ -516,10 +594,16 @@ class ServeLoop:
 
         while pending or queue:
             now = self.clock.now()
+            self._apply_churn(churn_q, now, applied)
             while pending and pending[0].arrival_t <= now:
                 queue.append(pending.popleft())
             if not queue:
-                self.clock.sleep_until(pending[0].arrival_t)
+                # Wake for whichever comes first: the next arrival or the
+                # next churn event.
+                t = pending[0].arrival_t
+                if churn_q:
+                    t = min(t, churn_q[0].t)
+                self.clock.sleep_until(t)
                 continue
 
             queue.sort(key=self._order)
@@ -531,9 +615,13 @@ class ServeLoop:
             if (len(queue) < max_b and next_arrival is not None
                     and next_arrival <= dispatch_by and now < dispatch_by):
                 # Coalesce: waiting for the next arrival cannot cost the
-                # head its preferred service — sleep to the earlier of the
-                # arrival and the head's dispatch-by point.
-                self.clock.sleep_until(min(next_arrival, dispatch_by))
+                # head its preferred service — sleep to the earliest of the
+                # arrival, the head's dispatch-by point and the next churn
+                # event (which must apply before the dispatch it precedes).
+                t = min(next_arrival, dispatch_by)
+                if churn_q:
+                    t = min(t, churn_q[0].t)
+                self.clock.sleep_until(max(t, now))
                 continue
 
             batch = queue[:max_b]
@@ -569,10 +657,20 @@ class ServeLoop:
                 ef_served=ef,
             ))
 
+        # Drain churn events dated past the last response so the trace's
+        # turnover completes even when traffic stops first.
+        while churn_q:
+            self.clock.sleep_until(churn_q[0].t)
+            self._apply_churn(churn_q, self.clock.now(), applied)
+
+        m = self.executor.mutable
         return ServeStats(
             responses=responses, batches=batches,
             recompiles_warmup=self.executor.recompiles_warmup,
             recompiles_steady=self.executor.recompiles_steady,
+            mutation_events=len(applied),
+            rejected=0,
+            health=None if m is None else m.health(),
         )
 
 

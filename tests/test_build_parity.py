@@ -30,10 +30,21 @@ def _items(profile):
     return jnp.asarray(mips_dataset(N, D, profile=profile, seed=11))
 
 
-def _assert_graphs_identical(g_host: GraphIndex, g_scan: GraphIndex):
+def _assert_graphs_identical(
+    g_host: GraphIndex, g_scan: GraphIndex, check_invariants: bool = True
+):
+    from repro.core.invariants import assert_graph_invariants
+
     assert np.array_equal(np.asarray(g_host.adj), np.asarray(g_scan.adj))
     assert int(g_host.size) == int(g_scan.size)
     assert int(g_host.entry) == int(g_scan.entry)
+    # Every freshly built graph must satisfy the structural invariants the
+    # mutation layer later relies on (core/invariants.py I1-I6).  Tests that
+    # commit fabricated random neighbor lists (which may contain self-loops
+    # no real find_neighbors would produce) opt out.
+    if check_invariants:
+        assert_graph_invariants(g_host, name="host")
+        assert_graph_invariants(g_scan, name="scan")
 
 
 @pytest.mark.parametrize("profile", PROFILES)
@@ -104,7 +115,7 @@ def test_commit_batch_padded_equals_ragged():
     sc_p = jnp.concatenate([sc, jnp.full((pad, 4), -np.inf, jnp.float32)])
     valid = jnp.concatenate([jnp.ones(5, bool), jnp.zeros(pad, bool)])
     padded = commit_batch(base, bids_p, nbr_p, sc_p, norms, valid=valid)
-    _assert_graphs_identical(ragged, padded)
+    _assert_graphs_identical(ragged, padded, check_invariants=False)
 
 
 def test_scan_build_rejects_neighbor_fn():

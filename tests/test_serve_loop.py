@@ -104,6 +104,11 @@ def test_replay_bit_identical():
         assert np.array_equal(r1[rid].scores, r2[rid].scores)
         assert r1[rid].finish_t == r2[rid].finish_t
         assert r1[rid].ef_served == r2[rid].ef_served
+    # Serving is read-only: the graph must satisfy the structural
+    # invariants (core/invariants.py) after the runs exactly as on build.
+    from repro.core.invariants import assert_graph_invariants
+
+    assert_graph_invariants(_index().graph)
 
 
 # ------------------------------------------------------- padding equivalence
