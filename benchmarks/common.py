@@ -86,12 +86,54 @@ def ipnsw_plus_index(tag: str, items: np.ndarray, **kw) -> IpNSWPlus:
 
 
 _json_rows: list = []
+_provenance_cache: dict = {}
+
+
+def provenance() -> dict:
+    """Environment provenance stamped onto every bench row so BENCH_*.json
+    trajectories are attributable across jax upgrades, commits and machines:
+    ``jax_version``, ``git_sha`` (short HEAD, "unknown" outside a checkout)
+    and ``device`` (the jax backend the numbers ran on).  Cached — computed
+    once per process."""
+    if not _provenance_cache:
+        import subprocess
+
+        import jax
+
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                capture_output=True, text=True, timeout=10,
+                cwd=os.path.dirname(os.path.abspath(__file__)),
+            ).stdout.strip() or "unknown"
+        except Exception:
+            sha = "unknown"
+        _provenance_cache.update(
+            jax_version=jax.__version__,
+            git_sha=sha,
+            device=jax.default_backend(),
+        )
+    return dict(_provenance_cache)
+
+
+def with_provenance(rows: list) -> list:
+    """Return ``rows`` with the provenance columns filled in (in place).
+    ``emit`` does this automatically; tests that feed rows straight to
+    scripts/check_bench_json.py call it themselves."""
+    prov = provenance()
+    for r in rows:
+        for k, v in prov.items():
+            r.setdefault(k, v)
+    return rows
 
 
 def emit(rows: list, header: bool = False) -> None:
-    """Print benchmark rows as CSV; mirror them to REPRO_BENCH_JSON if set."""
+    """Print benchmark rows as CSV; mirror them to REPRO_BENCH_JSON if set.
+    Every row is stamped with ``provenance()`` (existing keys win, so a
+    bench can override e.g. ``device`` for rows measured elsewhere)."""
     if not rows:
         return
+    with_provenance(rows)
     keys = list(rows[0])
     if header:
         print(",".join(keys))

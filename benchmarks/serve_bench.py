@@ -102,6 +102,95 @@ def serve_rows(
     }]
 
 
+def obs_overhead_rows(
+    profile: str = "word_like",
+    *,
+    quick: bool = True,
+    repeats: int = 3,
+    seed: int = 0,
+) -> list:
+    """One ``bench=obs_overhead`` row: the SAME seeded Poisson trace served
+    three ways — bare (no registry, no trace), metrics-on (registry only),
+    and traced (registry + TraceContext) — with the loop's host wall time
+    (min over ``repeats``, after a warmup run per mode) as the overhead
+    axis.  The virtual-clock p50 is a pure function of (trace, ladder,
+    model), so base and traced p50 must be EQUAL — kept as columns because
+    their divergence would mean observability changed scheduling, which is
+    a bug.  scripts/check_bench_json.py gates metrics_overhead_frac <= 5%
+    and recompiles_steady_traced == 0 (row schema: docs/BENCHMARKS.md)."""
+    import time as _time
+
+    import numpy as np
+    from benchmarks import common
+    from repro.data import mips_dataset, mips_queries
+    from repro.launch.serve_loop import (
+        BucketLadder,
+        LinearServiceModel,
+        ServeLoop,
+        VirtualClock,
+        poisson_trace,
+    )
+    from repro.obs import MetricsRegistry, make_trace_context, top_band_share
+
+    n, d = (2000, 24) if quick else (20000, 48)
+    n_requests = 96 if quick else 1000
+    ladder = BucketLadder(batches=(8, 32), efs=(16, 32, 64))
+    model = LinearServiceModel()
+
+    p = dict(common.PROFILES[profile])
+    p.pop("n_mult", None)
+    items = mips_dataset(n, d, **p)
+    queries = mips_queries(n_requests, d, seed=100 + seed)
+    index = common.ipnsw_index(f"serve_{profile}_{n}", items)
+    trace = poisson_trace(
+        queries, rate_qps=500.0 if quick else 2000.0, seed=seed, ef=64,
+        classes=("interactive", "standard", "relaxed"),
+    )
+    norms = np.linalg.norm(np.asarray(items), axis=1)
+    ctx = make_trace_context(norms, np.asarray(index.graph.adj))
+
+    # Modes run INTERLEAVED (base, metrics, traced, base, metrics, ...) with
+    # min-of-repeats per mode: machine drift (frequency scaling, page cache)
+    # moves whole repeats, not adjacent runs, so sequential per-mode timing
+    # would fold that drift into the overhead fraction.  The first sweep is
+    # an untimed warmup so compiles never land in a timed repeat (the 5% CI
+    # gate needs steady-state numbers, not compile noise).
+    reg = MetricsRegistry()
+    modes = [(None, None), (MetricsRegistry(), None), (reg, ctx)]
+    walls = [[] for _ in modes]
+    stats = [None] * len(modes)
+    for rep in range(repeats + 1):
+        for i, (registry, trace_ctx) in enumerate(modes):
+            loop = ServeLoop(index, ladder=ladder, clock=VirtualClock(),
+                             k=common.K, service_model=model,
+                             registry=registry, trace_ctx=trace_ctx)
+            t0 = _time.perf_counter()
+            stats[i] = loop.run(trace)
+            wall = _time.perf_counter() - t0
+            if rep > 0:
+                walls[i].append(wall)
+    (base_wall, metrics_wall, traced_wall) = (min(w) for w in walls)
+    base_stats, traced_stats = stats[0], stats[2]
+
+    band = reg.get("walk_evals_by_band").values
+    return [{
+        "bench": "obs_overhead",
+        "profile": profile,
+        "n": n,
+        "dim": d,
+        "n_requests": n_requests,
+        "base_wall_s": round(base_wall, 6),
+        "metrics_wall_s": round(metrics_wall, 6),
+        "traced_wall_s": round(traced_wall, 6),
+        "metrics_overhead_frac": round(metrics_wall / base_wall - 1.0, 4),
+        "traced_overhead_frac": round(traced_wall / base_wall - 1.0, 4),
+        "p50_ms_base": round(base_stats.percentile_ms(50), 4),
+        "p50_ms_traced": round(traced_stats.percentile_ms(50), 4),
+        "recompiles_steady_traced": traced_stats.recompiles_steady,
+        "top_band_share": round(top_band_share(band), 4),
+    }]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -133,6 +222,11 @@ def main():
         )
         emit(rows, header=header)
         header = False
+    # Observability overhead contract row (ISSUE 9): always measured on the
+    # word_like (lognormal) profile so top_band_share doubles as a live
+    # norm-bias check; plain ipnsw — the overhead question is per-walk, not
+    # per-index-kind.
+    emit(obs_overhead_rows("word_like", quick=quick), header=True)
 
 
 if __name__ == "__main__":

@@ -19,6 +19,16 @@ observability contract is broken:
       rejected during churn, the churned graph must still be compile-once
       (zero steady recompiles), and ``relink_debt`` must reach 0 after the
       full repair.
+  obs_overhead — the observability layer's contract (repro.obs, ISSUE 9):
+      the always-on metrics registry may cost at most 5% loop wall time
+      over an uninstrumented run, traced mode must cause ZERO steady-state
+      recompiles (trace shapes are static), and the virtual-clock p50 must
+      be identical base-vs-traced (observability must not change
+      scheduling).
+
+Additionally EVERY row of EVERY family must carry the provenance columns
+``jax_version`` / ``git_sha`` / ``device`` (benchmarks/common.py stamps
+them in ``emit``), so artifact trajectories stay attributable.
 
 A file with none of the known families fails outright.
 
@@ -28,6 +38,7 @@ A file with none of the known families fails outright.
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 PHASE_COLS = {
@@ -147,10 +158,87 @@ def check_churn(rows: list) -> list:
     return errors
 
 
+OBS_COLS = {
+    "profile", "base_wall_s", "metrics_wall_s", "traced_wall_s",
+    "metrics_overhead_frac", "traced_overhead_frac", "p50_ms_base",
+    "p50_ms_traced", "recompiles_steady_traced", "top_band_share",
+}
+
+# Always-on metrics must stay under this fraction of loop wall time
+# (ISSUE 9 acceptance bar).  The env override exists for callers that run
+# the gate on a machine already under load (tests run the bench in-process
+# alongside the rest of the suite, where wall-ratio noise swamps the real
+# ~0.1% registry cost); CI's dedicated bench step uses the strict default.
+OBS_OVERHEAD_BUDGET = float(
+    os.environ.get("REPRO_OBS_OVERHEAD_BUDGET", "0.05")
+)
+
+# Virtual-clock p50s are analytically identical base-vs-traced; a tiny eps
+# absorbs float printing, nothing more.
+OBS_P50_EPS = 1e-6
+
+
+def check_obs_overhead(rows: list) -> list:
+    errors = []
+    missing = _missing_cols(rows, OBS_COLS)
+    if missing:
+        errors.append(f"obs_overhead rows missing columns: {missing[0]}")
+        return errors
+    for r in rows:
+        tag = f"obs_overhead[{r.get('profile')}]"
+        frac = float(r["metrics_overhead_frac"])
+        if frac > OBS_OVERHEAD_BUDGET:
+            errors.append(
+                f"{tag}: always-on metrics cost {frac:.1%} of loop wall "
+                f"time (budget {OBS_OVERHEAD_BUDGET:.0%}) — the registry "
+                "path is no longer cheap enough to leave on"
+            )
+        if int(r["recompiles_steady_traced"]) != 0:
+            errors.append(
+                f"{tag}: {r['recompiles_steady_traced']} steady-state "
+                "recompiles with tracing on — trace shapes are no longer "
+                "static"
+            )
+        dp50 = abs(float(r["p50_ms_base"]) - float(r["p50_ms_traced"]))
+        if dp50 > OBS_P50_EPS:
+            errors.append(
+                f"{tag}: virtual p50 diverged base={r['p50_ms_base']} vs "
+                f"traced={r['p50_ms_traced']} — observability changed the "
+                "schedule"
+            )
+        if not 0.0 <= float(r["top_band_share"]) <= 1.0:
+            errors.append(
+                f"{tag}: implausible top_band_share {r['top_band_share']}"
+            )
+    return errors
+
+
+PROVENANCE_COLS = {"jax_version", "git_sha", "device"}
+
+
+def check_provenance(rows: list) -> list:
+    """Every row of every family must be attributable
+    (benchmarks/common.py::provenance)."""
+    bad = [
+        (i, sorted(PROVENANCE_COLS - set(r)))
+        for i, r in enumerate(rows)
+        if PROVENANCE_COLS - set(r)
+    ]
+    if bad:
+        i, cols = bad[0]
+        return [
+            f"{len(bad)} row(s) missing provenance columns "
+            f"(first: row {i} lacks {cols}) — emit through "
+            "benchmarks/common.py or stamp with with_provenance()"
+        ]
+    return []
+
+
 FAMILIES = {
     "build_phase": check_build_phase,
     "serve": check_serve,
     "churn": check_churn,
+    "obs_overhead": check_obs_overhead,
 }
 
 
@@ -158,7 +246,7 @@ def main(path: str) -> int:
     with open(path) as f:
         rows = json.load(f)
     checked = []
-    errors = []
+    errors = check_provenance(rows)
     for family, check in FAMILIES.items():
         fam_rows = [r for r in rows if r.get("bench") == family]
         if not fam_rows:

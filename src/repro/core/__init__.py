@@ -12,7 +12,10 @@ from repro.core.invariants import (
 from repro.core.ipnsw import IpNSW
 from repro.core.ipnsw_plus import IpNSWPlus, PlusResult
 from repro.core.lsh import SimpleLSH
-from repro.core.metrics import recall_at_k, recall_curve
+# recall helpers live in the observability layer now (repro.obs.recall);
+# re-exported here so `from repro.core import recall_at_k` keeps working
+# without tripping the repro.core.metrics deprecation shim.
+from repro.obs.recall import recall_at_k, recall_curve
 from repro.core.mutation import (
     ChurnEvent,
     ChurnTrace,

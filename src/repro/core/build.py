@@ -423,6 +423,14 @@ def build_graph(
         commit_tile, e=insert_batch * max_degree, norms=norms
     )
     steps = max_steps if max_steps is not None else 2 * ef_construction
+    # Phase spans report into the process-global obs registry (repro.obs
+    # never imports repro.core, so this is cycle-free).  Spans measure the
+    # DRIVER's wall time only: jax dispatch is async and no block is added
+    # here, so device work may overlap a span — the numbers locate where
+    # build time goes, they are not a device-time profile.
+    from repro.obs.registry import get_registry
+
+    reg = get_registry()
 
     if build_backend == "scan":
         if neighbor_fn is not None:
@@ -431,55 +439,61 @@ def build_graph(
                 "into the scan body and cannot honor neighbor_fn; use "
                 "build_backend='host' for custom finders"
             )
-        graph = bootstrap_graph(
-            prepared, norms, max_degree=max_degree, insert_batch=insert_batch,
-            reverse_links=reverse_links, commit_backend=commit_backend,
-            commit_tile=commit_tile,
-        )
-        _, bids, valid = batch_schedule(n, insert_batch)
-        if bids.shape[0]:
-            adj, size, entry, entry_norm = _scan_insert_jit(
-                graph.adj, graph.size, graph.entry, graph.entry_norm,
-                prepared, norms,
-                jnp.asarray(bids), jnp.asarray(valid),
-                max_degree=max_degree, ef=ef_construction, max_steps=steps,
-                reverse_links=reverse_links, backend=backend,
+        with reg.span("build_bootstrap", "bootstrap batch (exact top-k)"):
+            graph = bootstrap_graph(
+                prepared, norms, max_degree=max_degree,
+                insert_batch=insert_batch, reverse_links=reverse_links,
                 commit_backend=commit_backend, commit_tile=commit_tile,
             )
+        _, bids, valid = batch_schedule(n, insert_batch)
+        if bids.shape[0]:
+            with reg.span("build_insert",
+                          "insertion driver (dispatch only on scan)"):
+                adj, size, entry, entry_norm = _scan_insert_jit(
+                    graph.adj, graph.size, graph.entry, graph.entry_norm,
+                    prepared, norms,
+                    jnp.asarray(bids), jnp.asarray(valid),
+                    max_degree=max_degree, ef=ef_construction,
+                    max_steps=steps,
+                    reverse_links=reverse_links, backend=backend,
+                    commit_backend=commit_backend, commit_tile=commit_tile,
+                )
             graph = GraphIndex(
                 adj=adj, items=prepared, size=size, entry=entry,
                 entry_norm=entry_norm,
             )
         return graph
 
-    graph = bootstrap_graph(
-        prepared, norms, max_degree=max_degree, insert_batch=insert_batch,
-        reverse_links=reverse_links, commit_backend=commit_backend,
-        commit_tile=commit_tile,
-    )
+    with reg.span("build_bootstrap", "bootstrap batch (exact top-k)"):
+        graph = bootstrap_graph(
+            prepared, norms, max_degree=max_degree, insert_batch=insert_batch,
+            reverse_links=reverse_links, commit_backend=commit_backend,
+            commit_tile=commit_tile,
+        )
 
     start = min(insert_batch, n)
-    while start < n:
-        stop = min(start + insert_batch, n)
-        bids = jnp.arange(start, stop, dtype=jnp.int32)
-        batch_items = prepared[start:stop]
-        if neighbor_fn is None:
-            nbr, sc = find_neighbors(
-                graph,
-                batch_items,
-                max_degree=max_degree,
-                ef=ef_construction,
-                max_steps=steps,
-                backend=backend,
+    with reg.span("build_insert", "insertion driver (dispatch only on scan)"):
+        while start < n:
+            stop = min(start + insert_batch, n)
+            bids = jnp.arange(start, stop, dtype=jnp.int32)
+            batch_items = prepared[start:stop]
+            if neighbor_fn is None:
+                nbr, sc = find_neighbors(
+                    graph,
+                    batch_items,
+                    max_degree=max_degree,
+                    ef=ef_construction,
+                    max_steps=steps,
+                    backend=backend,
+                )
+            else:
+                nbr, sc = neighbor_fn(graph, batch_items)
+            graph = commit_batch(
+                graph, bids, nbr, sc, norms, reverse_links=reverse_links,
+                commit_backend=commit_backend, commit_tile=commit_tile,
             )
-        else:
-            nbr, sc = neighbor_fn(graph, batch_items)
-        graph = commit_batch(
-            graph, bids, nbr, sc, norms, reverse_links=reverse_links,
-            commit_backend=commit_backend, commit_tile=commit_tile,
-        )
-        if progress and (start // insert_batch) % 20 == 0:
-            print(f"  inserted {stop}/{n}")
-        start = stop
+            if progress and (start // insert_batch) % 20 == 0:
+                print(f"  inserted {stop}/{n}")
+            start = stop
 
     return graph

@@ -29,6 +29,7 @@ def _search(
     store: Optional[ItemStore] = None,
     valid=None,
     live=None,
+    trace=None,
     *,
     pool_size: int,
     max_steps: int,
@@ -41,6 +42,7 @@ def _search(
     return beam_search(
         graph, queries, init, pool_size=pool_size, max_steps=max_steps, k=k,
         backend=backend, storage=storage, store=store, valid=valid, live=live,
+        trace=trace,
     )
 
 
@@ -113,17 +115,21 @@ class IpNSW:
         storage: Optional[str] = None,
         valid: Optional[jax.Array] = None,
         live: Optional[jax.Array] = None,
+        trace=None,
     ) -> SearchResult:
         """``valid`` is the [B] bucket-padding mask (search.beam_search):
         pad rows return ids=-1 at zero eval cost, live rows are bit-identical
         to an unpadded call — the serving loop's fixed-shape entry point.
         ``live`` is the [N] tombstone mask (core/mutation.py): dead nodes
-        route the walk but never appear in results."""
+        route the walk but never appear in results.  ``trace`` is an
+        optional obs.TraceContext — the result then carries
+        ``SearchResult.trace`` walk telemetry at unchanged walk outputs
+        (search.beam_search)."""
         assert self.graph is not None, "call build() first"
         steps = max_steps if max_steps is not None else 2 * ef
         st = storage if storage is not None else self.storage
         return _search(
-            self.graph, queries, self._resolve_store(st), valid, live,
+            self.graph, queries, self._resolve_store(st), valid, live, trace,
             pool_size=max(ef, k), max_steps=steps, k=k,
             backend=backend if backend is not None else self.backend,
             storage=st,

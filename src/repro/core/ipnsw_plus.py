@@ -55,6 +55,8 @@ class PlusResult(NamedTuple):
     ip_evals: jax.Array     # [B]
     visited_ang: jax.Array  # [B, Va] ids scored on A_s (Fig-5 data)
     visited_ip: jax.Array   # [B, Vi] ids scored on G_s
+    trace: "Optional[object]" = None  # obs.WalkTrace of the G_s refine walk
+    #   (the stage the paper's norm-bias figures measure); None untraced
 
 
 def _seed_from_angular(ip_adj: jax.Array, ang_ids: jax.Array) -> jax.Array:
@@ -82,6 +84,7 @@ def _search_plus(
     ip_store: Optional[ItemStore] = None,
     valid: Optional[jax.Array] = None,
     live: Optional[jax.Array] = None,
+    trace=None,
     *,
     k: int,
     ef: int,
@@ -122,6 +125,9 @@ def _search_plus(
         live=live,
     )
     seeds = _seed_from_angular(ip_graph.adj, ang.ids)
+    # Tracing covers the G_s refine walk only: that is the walk whose norm
+    # bias the paper measures (the angular stage walks the normalized copy,
+    # where norm bands are degenerate by construction).
     ip = beam_search(
         ip_graph,
         queries,
@@ -134,6 +140,7 @@ def _search_plus(
         store=ip_store,
         valid=valid,
         live=live,
+        trace=trace,
     )
     return PlusResult(
         ids=ip.ids,
@@ -143,6 +150,7 @@ def _search_plus(
         ip_evals=ip.evals,
         visited_ang=ang.visited,
         visited_ip=ip.visited,
+        trace=ip.trace,
     )
 
 
@@ -320,12 +328,15 @@ class IpNSWPlus:
         storage: Optional[str] = None,
         valid: Optional[jax.Array] = None,
         live: Optional[jax.Array] = None,
+        trace=None,
     ) -> PlusResult:
         """``valid`` is the [B] bucket-padding mask (search.beam_search),
         applied to BOTH walks: pad rows skip the angular stage, seed nothing,
         and return ids=-1 — the serving loop's fixed-shape entry point.
         ``live`` is the [N] tombstone mask (core/mutation.py), shared by both
-        walks since the two graphs index the same catalog slots."""
+        walks since the two graphs index the same catalog slots.  ``trace``
+        is an optional obs.TraceContext over the RAW item norms; it traces
+        the G_s refine walk (PlusResult.trace) at unchanged outputs."""
         assert self.ip_graph is not None, "call build() first"
         ang_ef = ang_ef if ang_ef is not None else self.ang_ef
         k_ang = k_angular if k_angular is not None else self.k_angular
@@ -344,6 +355,7 @@ class IpNSWPlus:
             ip_store,
             valid,
             live,
+            trace,
             k=k,
             ef=ef,
             ang_ef=ang_ef,

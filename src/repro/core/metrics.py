@@ -1,32 +1,21 @@
-"""Recall / evaluation-count metrics (paper §5)."""
+"""Deprecated alias — the recall helpers moved to :mod:`repro.obs.recall`.
+
+This module name now collides conceptually with the observability layer's
+metrics *registry* (``repro.obs.registry``), so the quality metrics live in
+``repro.obs`` and this shim re-exports them for old imports.  New code
+should import from ``repro.obs`` (or ``repro.core``, which re-exports).
+"""
 from __future__ import annotations
 
-import numpy as np
+import warnings
 
+from repro.obs.recall import recall_at_k, recall_curve
 
-def recall_at_k(pred_ids: np.ndarray, true_ids: np.ndarray) -> float:
-    """Mean recall@k over queries.
+__all__ = ["recall_at_k", "recall_curve"]
 
-    pred_ids: [B, k'] (k' >= k allowed; -1 padding ignored)
-    true_ids: [B, k]  ground-truth ids
-    """
-    pred = np.asarray(pred_ids)
-    true = np.asarray(true_ids)
-    b, k = true.shape
-    hit = (pred[:, :, None] == true[:, None, :]) & (true[:, None, :] >= 0)
-    per_query = hit.any(axis=1).sum(axis=-1) / k
-    return float(per_query.mean())
-
-
-def recall_curve(results: list, true_ids: np.ndarray) -> list:
-    """[(evals_mean, recall)] points for a list of SearchResults at
-    increasing search effort — the paper's Fig-8a axis."""
-    out = []
-    for res in results:
-        out.append(
-            (
-                float(np.mean(np.asarray(res.evals))),
-                recall_at_k(np.asarray(res.ids), true_ids),
-            )
-        )
-    return out
+warnings.warn(
+    "repro.core.metrics moved to repro.obs.recall; import recall_at_k / "
+    "recall_curve from repro.obs (or repro.core) instead",
+    DeprecationWarning,
+    stacklevel=2,
+)

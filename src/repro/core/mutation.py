@@ -630,6 +630,10 @@ class MutableIndex:
             "tombstone_ratio": 1.0 - live_n / size,
             "dead_edge_frac": float(max(fracs)),
             "relink_debt": float(self.relink_debt()),
+            # Upsert capacity remaining (free tombstone slots + never-used
+            # headroom as a fraction of capacity): 0.0 means the next batch
+            # upsert without a matching delete raises.
+            "pool_headroom": self.free_slots() / max(self.capacity, 1),
         }
 
     def check_invariants(self, max_dead_edge_frac: float = 1.0) -> List[str]:

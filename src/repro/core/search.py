@@ -44,6 +44,9 @@ import jax.numpy as jnp
 
 from repro.core.graph import GraphIndex
 from repro.core.similarity import gather_scores
+# Safe non-lazy import: repro.obs depends only on jax/numpy, never on
+# repro.core, so the observability layer cannot cycle back here.
+from repro.obs.trace import TraceContext, WalkTrace, walk_trace
 from repro.core.storage import (
     STORAGE_BACKENDS,
     ItemStore,
@@ -64,6 +67,9 @@ class SearchResult(NamedTuple):
     visited: jax.Array  # [B, V] int32 every scored id (-1 padded), Fig-5 data
     dead_evals: Optional[jax.Array] = None  # [B] int32 evaluations spent on
     #   tombstoned nodes (mutation churn-health signal; None without live=)
+    trace: Optional[WalkTrace] = None  # walk telemetry (obs/trace.py); None
+    #   unless a TraceContext was passed — and then computed post-loop from
+    #   ``visited``, so the walk itself is untouched either way
 
 
 class _State(NamedTuple):
@@ -192,6 +198,7 @@ def beam_search(
     store: Optional[ItemStore] = None,
     valid: Optional[jax.Array] = None,
     live: Optional[jax.Array] = None,
+    trace: Optional[TraceContext] = None,
 ) -> SearchResult:
     """Run the batched walk.
 
@@ -227,6 +234,16 @@ def beam_search(
               ``SearchResult.dead_evals``.  ``None`` (the default) is the
               frozen-index fast path: bit-identical to the pre-mutation
               behavior, no extra gathers.
+    trace:    optional TraceContext (obs/trace.py).  When given, the result
+              carries ``SearchResult.trace``: the first ``trace_cap``
+              visited ids + walk scores per query, the per-norm-band eval
+              histogram, hub-hit counts and steps-to-converge.  Computed
+              AFTER the walk loop from the ``visited`` ring buffer inside
+              the same program, so the walk itself (and every other result
+              field) is bit-identical with tracing on or off; all trace
+              shapes are static, so toggling None <-> ctx is one extra
+              compile per dispatch shape and zero steady-state recompiles
+              (both pinned in tests/test_obs.py).
     """
     # Validate eagerly, before seeding does any work: a typo'd backend must
     # not survive until make_step_fn resolves it mid-trace (by which point a
@@ -240,6 +257,12 @@ def beam_search(
             f"storage must be one of {STORAGE_BACKENDS}, got {storage!r}"
         )
     adj, items = graph.adj, graph.items
+    if trace is not None and trace.band_ids.shape[0] != adj.shape[0]:
+        raise ValueError(
+            f"trace context covers {trace.band_ids.shape[0]} nodes but the "
+            f"graph has {adj.shape[0]} — rebuild it with make_trace_context "
+            "on this index's norms (mutable indexes: the full capacity)"
+        )
     if storage == "int8":
         if score_fn is not gather_scores:
             raise ValueError(
@@ -333,6 +356,14 @@ def beam_search(
 
     final = jax.lax.while_loop(cond, body, state)
     dead_evals = final.dead_evals if live is not None else None
+    # Telemetry is derived from the finished ring buffer — the loop above
+    # never saw the trace context, which is what makes trace=None trivially
+    # bit-identical.  Scored with walk_score_fn so int8 traces report the
+    # quantized scores the walk actually ranked by.
+    tr = None if trace is None else walk_trace(
+        trace, final.visited, queries, items, walk_score_fn,
+        seeds=S, degree=M,
+    )
 
     if store is not None:
         # Exact fp32 rerank of the final ef-pool (asymmetric refine,
@@ -361,6 +392,7 @@ def beam_search(
             steps=final.step,
             visited=final.visited,
             dead_evals=dead_evals,
+            trace=tr,
         )
 
     if live is not None:
@@ -381,6 +413,7 @@ def beam_search(
             steps=final.step,
             visited=final.visited,
             dead_evals=dead_evals,
+            trace=tr,
         )
 
     return SearchResult(
@@ -389,4 +422,5 @@ def beam_search(
         evals=final.evals,
         steps=final.step,
         visited=final.visited,
+        trace=tr,
     )

@@ -46,7 +46,10 @@ def beam_step(
 
     With ``live`` given (the mutation layer's tombstone mask, DESIGN.md §9),
     ``n_dead`` counts this step's evaluations that landed on tombstones;
-    pool contents are unchanged — dead nodes stay traversable."""
+    pool contents are unchanged — dead nodes stay traversable.  Without it
+    ``n_dead`` is None — matching beam_step_ref's contract (pinned in
+    tests/test_kernel_parity.py) — even though the kernel still emits its
+    (all-zero) dead-count output; the wrapper drops it."""
     d = queries.shape[-1]
     dp = _round_up(d, 128)
     q = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, dp - d)))
@@ -77,5 +80,5 @@ def beam_step(
         nbr_ids=onb,
         done=odn[:, 0] != 0,
         n_scored=onv[:, 0],
-        n_dead=ond[:, 0],
+        n_dead=None if live is None else ond[:, 0],
     )

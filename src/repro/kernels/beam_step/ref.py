@@ -84,8 +84,12 @@ def beam_step_ref(
     nbr_scores = jnp.where(valid, nbr_scores, NEG_INF)
     nbr_ids = jnp.where(valid, nbrs, -1).astype(jnp.int32)
     n_scored = valid.sum(axis=-1).astype(jnp.int32)
+    # Contract (pinned in tests/test_kernel_parity.py): n_dead is None —
+    # not a zeros array — whenever the walk carries no live mask, on BOTH
+    # step backends, so callers can distinguish "mutation off" from "no
+    # tombstones hit" without inspecting values.
     if live is None:
-        n_dead = jnp.zeros_like(n_scored)
+        n_dead = None
     else:
         dead = valid & ~live.astype(bool)[jnp.maximum(nbrs, 0)]
         n_dead = dead.sum(axis=-1).astype(jnp.int32)

@@ -87,6 +87,14 @@ def main():
     ap.add_argument("--relink-budget", type=int, default=64,
                     help="nodes repaired per scheduled relink pass of the "
                          "churn trace (0 disables periodic repair)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a metrics snapshot on exit: *.prom = "
+                         "Prometheus text, anything else = JSONL with the "
+                         "event timeline (render with scripts/obs_report.py)")
+    ap.add_argument("--trace", action="store_true",
+                    help="thread an obs.TraceContext through every walk: "
+                         "per-norm-band eval histograms + hub hits ride "
+                         "along at unchanged walk outputs (repro.obs)")
     args = ap.parse_args()
 
     compile_events0 = sl.xla_compile_events()
@@ -96,6 +104,10 @@ def main():
     _, gt = exact_topk(queries, items, k=args.k)
     gt = np.asarray(gt)
 
+    if args.trace and (args.shards > 1 or args.index == "bruteforce"):
+        raise SystemExit("--trace instruments graph walks on one device; "
+                         "drop --shards / pick a graph index")
+
     if args.loop:
         if args.shards > 1 or args.index == "bruteforce":
             raise SystemExit("--loop serves ipnsw/ipnsw_plus on one device; "
@@ -103,6 +115,7 @@ def main():
         _run_loop(args, items, compile_events0)
         return
 
+    trace_ctx = None
     if args.shards > 1:
         from repro.core.distributed import build_sharded, sharded_search
 
@@ -150,14 +163,30 @@ def main():
                     commit_backend=args.commit_backend,
                     commit_tile=args.commit_tile,
                     storage=args.storage).build(items)
-        r = index.search(queries, k=args.k, ef=args.ef)  # compile warmup
+        if args.trace:
+            trace_ctx = _trace_context(index)
+        r = index.search(queries, k=args.k, ef=args.ef,
+                         trace=trace_ctx)  # compile warmup
         jax.block_until_ready(r.ids)
         t0 = time.perf_counter()
-        r = index.search(queries, k=args.k, ef=args.ef)
+        r = index.search(queries, k=args.k, ef=args.ef, trace=trace_ctx)
         jax.block_until_ready(r.ids)
         dt = time.perf_counter() - t0
         rec = recall_at_k(np.asarray(r.ids), gt)
         ev = float(np.mean(np.asarray(r.evals)))
+        if trace_ctx is not None:
+            from repro.obs import get_registry
+
+            band = np.asarray(r.trace.band_hist).sum(axis=0)
+            get_registry().vector(
+                "walk_evals_by_band", band.shape[0],
+                "similarity evaluations per catalog norm band (Fig-5)",
+                label="band",
+            ).add(band)
+            get_registry().counter(
+                "walk_hub_evals_total",
+                "evaluations landing on the top-in-degree hub set (Fig-4)",
+            ).inc(int(np.asarray(r.trace.hub_evals).sum()))
 
     print(f"[serve] index={args.index} shards={args.shards} "
           f"storage={args.storage} "
@@ -165,6 +194,52 @@ def main():
           f"recall@{args.k}={rec:.3f} evals/q={ev:.0f} "
           f"({dt/args.batch*1e3:.2f} ms/query batch-amortized) "
           f"xla_compiles={sl.xla_compile_events() - compile_events0}")
+    if trace_ctx is not None:
+        from repro.obs import get_registry
+
+        _print_band_table(get_registry(), trace_ctx)
+    if args.metrics_out:
+        from repro.obs import get_registry
+
+        _write_metrics(get_registry(), args.metrics_out)
+
+
+def _trace_context(index, size=None):
+    """An obs.TraceContext over the index the walks will actually run on:
+    raw-item norms (the ip graph for ip-NSW+ — the walk the paper's norm
+    bias lives in) and its adjacency for the hub set.  MutableIndex passes
+    its padded capacity arrays with ``size=`` the real catalog so band
+    edges fit the true norm distribution."""
+    from repro.core.mutation import MutableIndex
+    from repro.obs import make_trace_context
+
+    if isinstance(index, MutableIndex):
+        g = index.graph
+        norms = np.asarray(index.norms)
+    else:
+        g = index.ip_graph if isinstance(index, IpNSWPlus) else index.graph
+        norms = np.linalg.norm(np.asarray(g.items), axis=1)
+    return make_trace_context(norms, np.asarray(g.adj), size=size)
+
+
+def _write_metrics(registry, path: str, meta=None) -> None:
+    from repro.obs import write_metrics
+
+    full = {"tool": "repro.launch.serve"}
+    full.update(meta or {})
+    fmt = write_metrics(registry, path, meta=full)
+    print(f"[serve] metrics snapshot ({fmt}) -> {path}")
+
+
+def _print_band_table(registry, trace_ctx) -> None:
+    from repro.obs import render_band_table
+
+    vec = registry.get("walk_evals_by_band")
+    if vec is None:
+        print("[serve] no traced walks recorded")
+        return
+    print("[serve] evals by catalog norm band (band 0 = smallest norms):")
+    print(render_band_table(vec.values, np.asarray(trace_ctx.band_edges)))
 
 
 def _build_ladder(batch: int, ef: int) -> "sl.BucketLadder":
@@ -206,9 +281,18 @@ def _run_loop(args, items, compile_events0: int) -> None:
             relink_every=dur / 4 if args.relink_budget else None,
             relink_budget=args.relink_budget,
         )
+    registry = trace_ctx = None
+    if args.metrics_out or args.trace:
+        from repro.obs import MetricsRegistry
+
+        registry = MetricsRegistry()
+    if args.trace:
+        trace_ctx = _trace_context(index, size=args.n_items)
+
     clock = sl.VirtualClock() if args.clock == "virtual" else sl.WallClock()
     loop = sl.ServeLoop(index, ladder=ladder, clock=clock, k=args.k,
-                        service_model=sl.LinearServiceModel())
+                        service_model=sl.LinearServiceModel(),
+                        registry=registry, trace_ctx=trace_ctx)
     stats = loop.run(trace, churn=churn)
 
     by_rid = sorted(stats.responses, key=lambda r: r.rid)
@@ -231,6 +315,18 @@ def _run_loop(args, items, compile_events0: int) -> None:
               f"live_frac={s['health_live_fraction']:.3f} "
               f"dead_edge_frac={s['health_dead_edge_frac']:.3f} "
               f"relink_debt={s['health_relink_debt']:.0f}")
+    if trace_ctx is not None:
+        _print_band_table(registry, trace_ctx)
+    if args.metrics_out:
+        meta = {"mode": "loop", "index": args.index, "clock": args.clock,
+                "profile": args.profile, "n_items": args.n_items,
+                "rate_qps": args.rate, "requests": args.requests,
+                "traced": bool(args.trace)}
+        if trace_ctx is not None:
+            meta["band_edges"] = [
+                float(e) for e in np.asarray(trace_ctx.band_edges)
+            ]
+        _write_metrics(registry, args.metrics_out, meta=meta)
     if s["recompiles_steady"]:
         raise SystemExit(
             f"bucket-ladder regression: {s['recompiles_steady']} "

@@ -50,6 +50,14 @@ is exactly one XLA compile), split into warmup vs steady-state — a bucket
 ladder regression shows up as ``recompiles_steady > 0``.  A module-level
 ``jax.monitoring`` listener additionally counts raw XLA compile events as a
 cross-check (``xla_compile_events()``), which ``serve.py`` reports.
+Beyond the built-in counters, ``ServeLoop(registry=...)`` streams queue
+wait, coalesce size, occupancy, degrades, deadline misses, churn health and
+a dispatch/response event timeline into a ``repro.obs`` MetricsRegistry,
+and ``trace_ctx=`` threads an ``obs.TraceContext`` through every dispatch
+so per-norm-band walk histograms ride along (docs/ARCHITECTURE.md,
+"The observability layer").  Every registry record carries LOOP-clock
+values — the no-wall-time property above is preserved, and a VirtualClock
+run exports a deterministic registry.
 
 See docs/ARCHITECTURE.md ("The serving layer") and benchmarks/serve_bench.py
 for the p50/p99/QPS/occupancy rows built on top of this loop.
@@ -272,28 +280,30 @@ class LinearServiceModel:
 # --------------------------------------------------------------------------
 
 
-def _ipnsw_bucket(graph, store, live, queries, valid, *, k, ef, backend,
-                  storage):
+def _ipnsw_bucket(graph, store, live, trace, queries, valid, *, k, ef,
+                  backend, storage):
     b = queries.shape[0]
     init = jnp.broadcast_to(graph.entry[None, None], (b, 1)).astype(jnp.int32)
     r = beam_search(
         graph, queries, init, pool_size=max(ef, k), max_steps=2 * ef, k=k,
         backend=backend, storage=storage, store=store, valid=valid, live=live,
+        trace=trace,
     )
-    return r.ids, r.scores, r.evals
+    return r.ids, r.scores, r.evals, r.trace
 
 
-def _plus_bucket(ang_graph, ip_graph, ang_store, ip_store, live, queries,
-                 valid, *, k, ef, ang_ef, k_angular, backend, storage):
+def _plus_bucket(ang_graph, ip_graph, ang_store, ip_store, live, trace,
+                 queries, valid, *, k, ef, ang_ef, k_angular, backend,
+                 storage):
     from repro.core.ipnsw_plus import _search_plus
 
     r = _search_plus(
-        ang_graph, ip_graph, queries, ang_store, ip_store, valid, live,
+        ang_graph, ip_graph, queries, ang_store, ip_store, valid, live, trace,
         k=k, ef=ef, ang_ef=ang_ef, k_angular=k_angular,
         max_steps=2 * ef, ang_max_steps=2 * max(ang_ef, k_angular),
         backend=backend, storage=storage,
     )
-    return r.ids, r.scores, r.evals
+    return r.ids, r.scores, r.evals, r.trace
 
 
 class BucketExecutor:
@@ -316,7 +326,8 @@ class BucketExecutor:
     """
 
     def __init__(self, index, ladder: BucketLadder, *, k: int = 10,
-                 donate: Optional[bool] = None):
+                 donate: Optional[bool] = None, trace_ctx=None,
+                 registry=None):
         from repro.core.mutation import MutableIndex
 
         self.mutable = index if isinstance(index, MutableIndex) else None
@@ -333,6 +344,17 @@ class BucketExecutor:
         if donate is None:  # CPU jax logs 'donation not implemented' warnings
             donate = jax.default_backend() in ("tpu", "gpu")
         self.donate = donate
+        # Observability (repro.obs): trace_ctx threads walk telemetry through
+        # every dispatch — it is an executor-lifetime constant, so the traced
+        # program still compiles once per bucket (warmup already compiles the
+        # traced shape; zero steady-state recompiles, pinned in
+        # tests/test_obs.py).  registry receives the shape-free walk
+        # aggregates per dispatch (the LOOP owns every time-stamped record —
+        # the executor never reads any clock).  Both default off = the exact
+        # pre-observability path.
+        self.trace_ctx = trace_ctx
+        self.registry = registry
+        self.last_walk: Optional[Dict[str, np.ndarray]] = None
         self._programs: Dict[Bucket, object] = {}
         self.compile_log: List[Tuple[Bucket, str]] = []
         self._steady = False
@@ -373,9 +395,10 @@ class BucketExecutor:
                 idx.ang_graph, idx.ip_graph,
                 idx.ang_store if idx.storage == "int8" else None,
                 idx.ip_store if idx.storage == "int8" else None,
-                live,
+                live, self.trace_ctx,
             )
-        return (idx.graph, idx._resolve_store(idx.storage), live)
+        return (idx.graph, idx._resolve_store(idx.storage), live,
+                self.trace_ctx)
 
     def _build_program(self, bucket: Bucket):
         idx = self.index
@@ -385,13 +408,13 @@ class BucketExecutor:
                 k_angular=idx.k_angular, backend=idx.backend,
                 storage=idx.storage,
             )
-            query_argnum = 5
+            query_argnum = 6
         else:
             fn = functools.partial(
                 _ipnsw_bucket, k=self.k, ef=bucket.ef, backend=idx.backend,
                 storage=idx.storage,
             )
-            query_argnum = 3
+            query_argnum = 4
         jit_kwargs = {"donate_argnums": (query_argnum,)} if self.donate else {}
         return jax.jit(fn, **jit_kwargs)
 
@@ -417,9 +440,44 @@ class BucketExecutor:
             self.compile_log.append(
                 (bucket, "steady" if self._steady else "warmup")
             )
-        ids, scores, evals = fn(*self._consts(), jnp.asarray(queries),
-                                jnp.asarray(valid))
+        ids, scores, evals, walk = fn(*self._consts(), jnp.asarray(queries),
+                                      jnp.asarray(valid))
+        self._record_walk(walk, np.asarray(valid))
         return np.asarray(ids), np.asarray(scores), np.asarray(evals)
+
+    def _record_walk(self, walk, valid: np.ndarray) -> None:
+        """Stash this dispatch's walk telemetry (``last_walk``: batch-summed
+        band histogram, hub evals, steps) and fold it into the registry's
+        always-on vectors/counters.  Pad rows contribute zero (born done —
+        no evals, no visited entries), so no masking is needed beyond the
+        row count.  Time-stamped events are the LOOP's job; nothing here
+        reads a clock."""
+        if walk is None:
+            self.last_walk = None
+            return
+        band = np.asarray(walk.band_hist).sum(axis=0)
+        hub = int(np.asarray(walk.hub_evals).sum())
+        steps = np.asarray(walk.steps_to_converge)
+        self.last_walk = {
+            "band_hist": band,
+            "hub_evals": hub,
+            "steps_mean": float(steps[valid].mean()) if valid.any() else 0.0,
+            "n": int(valid.sum()),
+        }
+        reg = self.registry
+        if reg is not None:
+            reg.vector(
+                "walk_evals_by_band", band.shape[0],
+                "similarity evaluations per catalog norm band (Fig-5)",
+                label="band",
+            ).add(band)
+            reg.counter(
+                "walk_hub_evals_total",
+                "evaluations landing on the top-in-degree hub set (Fig-4)",
+            ).inc(hub)
+            reg.counter(
+                "walk_evals_total", "total similarity evaluations",
+            ).inc(float(band.sum()))
 
 
 # --------------------------------------------------------------------------
@@ -509,13 +567,22 @@ class ServeLoop:
     def __init__(self, index, *, ladder: Optional[BucketLadder] = None,
                  clock=None, k: int = 10, service_model=None,
                  executor: Optional[BucketExecutor] = None,
-                 assert_invariants: bool = False):
+                 assert_invariants: bool = False,
+                 registry=None, trace_ctx=None):
         self.ladder = ladder if ladder is not None else BucketLadder()
         self.clock = clock if clock is not None else VirtualClock()
         self.service_model = (service_model if service_model is not None
                               else LinearServiceModel())
+        # registry/trace_ctx (repro.obs): None = the exact pre-observability
+        # path, zero overhead.  Every registry record in this loop carries
+        # loop-clock timestamps and values only — the loop still never reads
+        # wall time (the registry's wall-clock span() is never used here;
+        # tests pin the no-wall-time property with a time-module bomb).
+        self.registry = registry
         self.executor = (executor if executor is not None
-                         else BucketExecutor(index, self.ladder, k=k))
+                         else BucketExecutor(index, self.ladder, k=k,
+                                             trace_ctx=trace_ctx,
+                                             registry=registry))
         self.k = self.executor.k
         # Opt-in safety net: re-check core/invariants.py after every applied
         # churn event (costs a host sweep per event; tests and debugging).
@@ -550,6 +617,12 @@ class ServeLoop:
 
             ev = churn_q.popleft()
             applied.append(apply_churn_event(m, ev))
+            if self.registry is not None:
+                self.registry.counter(
+                    "index_churn_events_total", "applied churn events",
+                ).inc()
+                self.registry.event("churn", now, kind=ev.kind)
+                self._record_health(m)
             if self.assert_invariants:
                 errs = m.check_invariants()
                 if errs:
@@ -557,6 +630,63 @@ class ServeLoop:
                         "graph invariants violated after churn event "
                         f"{ev.kind!r} at t={ev.t}:\n" + "\n".join(errs)
                     )
+
+    def _record_health(self, m) -> None:
+        """Mirror MutableIndex.health() into registry gauges (post-churn
+        index health: tombstone ratio, relink debt, dead edges, headroom)."""
+        for key, val in m.health().items():
+            self.registry.gauge(
+                f"index_{key}", "MutableIndex.health() gauge",
+            ).set(val)
+
+    def _record_dispatch(self, bucket: Bucket, batch, now: float,
+                         finish: float, degraded: bool) -> None:
+        """Fold one dispatch + its responses into the registry.  All values
+        derive from the loop clock and the already-built batch — no wall
+        time, no extra device work."""
+        reg = self.registry
+        n = len(batch)
+        reg.counter("serve_requests_total", "requests served").inc(n)
+        reg.counter("serve_batches_total", "bucket dispatches").inc()
+        if degraded:
+            reg.counter(
+                "serve_degraded_total",
+                "dispatches served below the preferred ladder ef",
+            ).inc()
+        reg.histogram(
+            "serve_coalesce_size", "requests coalesced per dispatch",
+            buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256, 512),
+        ).observe(n)
+        reg.histogram(
+            "serve_occupancy", "live rows / bucket batch per dispatch",
+            buckets=(0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0),
+        ).observe(n / bucket.batch)
+        wait_h = reg.histogram(
+            "serve_queue_wait_seconds", "arrival -> dispatch (loop clock)",
+        )
+        lat_h = reg.histogram(
+            "serve_latency_seconds", "arrival -> finish (loop clock)",
+        )
+        miss = reg.counter("serve_deadline_miss_total", "late responses")
+        for r in batch:
+            wait_h.observe(now - r.arrival_t)
+            lat_h.observe(finish - r.arrival_t)
+            if finish > r.deadline_t:
+                miss.inc()
+            reg.event(
+                "response", finish, rid=r.rid,
+                latency_s=finish - r.arrival_t,
+                queue_wait_s=now - r.arrival_t,
+                deadline_met=finish <= r.deadline_t,
+            )
+        ev = {"batch": bucket.batch, "ef": bucket.ef, "n": n,
+              "degraded": degraded}
+        walk = self.executor.last_walk
+        if walk is not None:
+            ev["band_hist"] = [int(v) for v in walk["band_hist"]]
+            ev["hub_evals"] = walk["hub_evals"]
+            ev["steps_mean"] = walk["steps_mean"]
+        reg.event("dispatch", now, **ev)
 
     def run(self, requests: Iterable[Request], churn=None) -> ServeStats:
         """``churn`` (optional) is a ``core.mutation.ChurnTrace`` — or any
@@ -656,6 +786,8 @@ class ServeLoop:
                 bucket=bucket, rids=tuple(r.rid for r in batch),
                 ef_served=ef,
             ))
+            if self.registry is not None:
+                self._record_dispatch(bucket, batch, now, finish, degraded)
 
         # Drain churn events dated past the last response so the trace's
         # turnover completes even when traffic stops first.
@@ -664,6 +796,14 @@ class ServeLoop:
             self._apply_churn(churn_q, self.clock.now(), applied)
 
         m = self.executor.mutable
+        if self.registry is not None:
+            self.registry.gauge(
+                "serve_recompiles_warmup", "program builds during warmup",
+            ).set(self.executor.recompiles_warmup)
+            self.registry.gauge(
+                "serve_recompiles_steady",
+                "program builds after warmup (ladder regression if > 0)",
+            ).set(self.executor.recompiles_steady)
         return ServeStats(
             responses=responses, batches=batches,
             recompiles_warmup=self.executor.recompiles_warmup,

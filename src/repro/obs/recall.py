@@ -1,0 +1,38 @@
+"""Recall / evaluation-count metrics (paper §5).
+
+Moved verbatim from ``repro.core.metrics`` so the quality metrics live next
+to the rest of the observability layer (and the old module name is free of
+the collision with :mod:`repro.obs.registry`).  ``repro.core.metrics``
+remains as a deprecation shim re-exporting these names.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def recall_at_k(pred_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    """Mean recall@k over queries.
+
+    pred_ids: [B, k'] (k' >= k allowed; -1 padding ignored)
+    true_ids: [B, k]  ground-truth ids
+    """
+    pred = np.asarray(pred_ids)
+    true = np.asarray(true_ids)
+    b, k = true.shape
+    hit = (pred[:, :, None] == true[:, None, :]) & (true[:, None, :] >= 0)
+    per_query = hit.any(axis=1).sum(axis=-1) / k
+    return float(per_query.mean())
+
+
+def recall_curve(results: list, true_ids: np.ndarray) -> list:
+    """[(evals_mean, recall)] points for a list of SearchResults at
+    increasing search effort — the paper's Fig-8a axis."""
+    out = []
+    for res in results:
+        out.append(
+            (
+                float(np.mean(np.asarray(res.evals))),
+                recall_at_k(np.asarray(res.ids), true_ids),
+            )
+        )
+    return out

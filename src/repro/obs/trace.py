@@ -1,0 +1,212 @@
+"""Device-side walk tracing — per-hop traces and norm-bias reductions.
+
+The paper's argument is diagnostic: MIPS walks concentrate their similarity
+evaluations on large-norm, high-in-degree hub nodes (Figs 1/4/5).  This
+module turns those one-off figure scripts into an always-available runtime
+signal: pass a :class:`TraceContext` to ``beam_search`` (or any index
+``search``) and the result carries a :class:`WalkTrace` with
+
+  ids / scores / step — the first ``trace_cap`` visited ids per query, their
+      walk scores, and a static column->step map (step 0 = seeds, step t>=1 =
+      the t-th expansion round) — the raw per-hop signal the ROADMAP's
+      learned-routing item needs as training data.
+  band_hist — evaluations per norm band (default: deciles of the catalog
+      norm distribution), the Fig-5 histogram recomputed per batch.
+  hub_evals — evaluations that landed on the precomputed top-in-degree hub
+      set (Fig-4's hub concentration).
+  steps_to_converge — expansion rounds in which the query scored at least
+      one new node (its personal walk length, vs. the batch-max ``steps``).
+
+How it works — and why both step backends get tracing for free: the walk
+already appends every scored id to the ``visited`` ring buffer with exact
+step structure (columns ``< S`` are the seeds; column ``S + t*M + j`` is
+neighbor ``j`` of expansion round ``t``; invalid slots are ``-1``).  The
+trace is therefore computed *after* the while_loop, inside the same jit
+program, purely from ``visited`` — the loop body is untouched, so
+``trace=None`` is trivially bit-identical to an untraced walk (pinned in
+tests/test_obs.py), and the reference and pallas backends share one
+implementation.  Trace scores are recomputed with the walk's own scorer
+(the quantized store scorer under ``storage="int8"``), so they match what
+the walk actually ranked by.
+
+All shapes are static functions of ``(trace_cap, n_bands)`` and the walk
+geometry: flipping tracing on/off changes the *pytree structure* of one
+argument, which jit treats as a different cache entry — one extra compile
+per bucket when first enabled, then zero steady-state recompiles (pinned in
+tests/test_obs.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+class WalkTrace(NamedTuple):
+    """Per-query walk telemetry (fixed shapes; see module docstring)."""
+
+    ids: jax.Array                # [B, C] int32 first C visited ids (-1 pad)
+    scores: jax.Array             # [B, C] fp32 walk scores (-inf at pads)
+    step: jax.Array               # [C] int32 static column -> step map
+    band_hist: jax.Array          # [B, n_bands] int32 evals per norm band
+    hub_evals: jax.Array          # [B] int32 evals on the hub set
+    steps_to_converge: jax.Array  # [B] int32 rounds with >=1 new eval
+
+
+@jax.tree_util.register_pytree_node_class
+class TraceContext:
+    """Precomputed catalog-side lookup tables the trace reduces against.
+
+    Registered as a pytree so it can cross jit boundaries: the arrays
+    (``band_ids``, ``hub_mask``, ``band_edges``) are leaves; the static
+    shape parameters ``(trace_cap, n_bands)`` ride in aux_data and become
+    part of the jit cache key.  Build one with :func:`make_trace_context`.
+    """
+
+    def __init__(self, band_ids, hub_mask, band_edges, *,
+                 trace_cap: int, n_bands: int):
+        self.band_ids = band_ids      # [N] int32 node -> norm band
+        self.hub_mask = hub_mask      # [N] bool  node in top-in-degree set
+        self.band_edges = band_edges  # [n_bands + 1] fp32 norm band edges
+        self.trace_cap = int(trace_cap)
+        self.n_bands = int(n_bands)
+
+    def tree_flatten(self):
+        leaves = (self.band_ids, self.hub_mask, self.band_edges)
+        return leaves, (self.trace_cap, self.n_bands)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        band_ids, hub_mask, band_edges = leaves
+        trace_cap, n_bands = aux
+        return cls(band_ids, hub_mask, band_edges,
+                   trace_cap=trace_cap, n_bands=n_bands)
+
+    def __repr__(self):
+        n = getattr(self.band_ids, "shape", ("?",))[0]
+        return (f"TraceContext(n={n}, n_bands={self.n_bands}, "
+                f"trace_cap={self.trace_cap})")
+
+
+def make_trace_context(
+    norms,
+    adj=None,
+    *,
+    size: Optional[int] = None,
+    trace_cap: int = 128,
+    n_bands: int = 10,
+    hub_frac: float = 0.01,
+) -> TraceContext:
+    """Build a :class:`TraceContext` from catalog norms (+ optional adjacency).
+
+    norms:     [N] item norms (N = catalog size, or the mutable capacity —
+               pool slots included so upserted nodes stay in range).
+    adj:       optional [N, M] adjacency; when given, the hub set is the top
+               ``ceil(hub_frac * size)`` nodes by in-degree (the paper's
+               Fig-4 axis).  Without it ``hub_evals`` reads as all-zero.
+    size:      number of *real* nodes (defaults to N); band edges are fitted
+               on ``norms[:size]`` so uninitialized capacity slots don't
+               skew the deciles.
+    trace_cap: per-query visited-prefix length carried in the trace.
+    n_bands:   norm bands (10 = the paper's deciles).
+
+    Host-side, numpy, done once per index — the per-walk cost is two int
+    gathers and a one-hot reduce.
+    """
+    norms = np.asarray(norms, np.float32).reshape(-1)
+    n = norms.shape[0]
+    size = n if size is None else int(size)
+    if not 0 < size <= n:
+        raise ValueError(f"size must be in (0, {n}], got {size}")
+    if trace_cap <= 0 or n_bands <= 0:
+        raise ValueError(
+            f"trace_cap and n_bands must be positive, got "
+            f"trace_cap={trace_cap} n_bands={n_bands}"
+        )
+    edges = np.quantile(norms[:size], np.linspace(0.0, 1.0, n_bands + 1))
+    edges = edges.astype(np.float32)
+    # Interior edges only: band i covers (edges[i], edges[i+1]], clamped to
+    # [0, n_bands-1] so out-of-range norms (churned-in items) still land in
+    # an end band instead of indexing out of bounds.
+    band_ids = np.searchsorted(edges[1:-1], norms, side="left")
+    band_ids = np.clip(band_ids, 0, n_bands - 1).astype(np.int32)
+
+    hub_mask = np.zeros(n, bool)
+    if adj is not None:
+        adj = np.asarray(adj)
+        flat = adj[adj >= 0]
+        indeg = np.bincount(flat, minlength=n)[:n]
+        n_hubs = max(1, int(np.ceil(hub_frac * size)))
+        hub_mask[np.argsort(indeg)[::-1][:n_hubs]] = True
+
+    return TraceContext(
+        jnp.asarray(band_ids),
+        jnp.asarray(hub_mask),
+        jnp.asarray(edges),
+        trace_cap=trace_cap,
+        n_bands=n_bands,
+    )
+
+
+def step_of_column(n_cols: int, *, seeds: int, degree: int) -> np.ndarray:
+    """The static visited-column -> walk-step map: columns ``< seeds`` are
+    step 0, column ``seeds + t*degree + j`` is step ``t + 1``."""
+    cols = np.arange(n_cols)
+    return np.where(
+        cols < seeds, 0, 1 + (cols - seeds) // max(degree, 1)
+    ).astype(np.int32)
+
+
+def walk_trace(
+    ctx: TraceContext,
+    visited: jax.Array,
+    queries: jax.Array,
+    items: jax.Array,
+    score_fn,
+    *,
+    seeds: int,
+    degree: int,
+) -> WalkTrace:
+    """Reduce a finished walk's visited ring buffer into a WalkTrace.
+
+    Runs inside the caller's jit program (pure jnp, static shapes).
+    ``score_fn`` must be the scorer the walk itself used so trace scores
+    match the walk's ranking (the quantized scorer under int8 storage).
+    """
+    b, v = visited.shape
+    valid = visited >= 0
+    safe = jnp.maximum(visited, 0)
+
+    # Per-hop prefix: the first trace_cap visited columns.  The ring buffer
+    # is append-only in step order, so a prefix IS the first hops.
+    c = min(ctx.trace_cap, v)
+    ids = visited[:, :c]
+    tr_valid = valid[:, :c]
+    scores = jnp.where(
+        tr_valid,
+        score_fn(queries, items, jnp.maximum(ids, 0)).astype(jnp.float32),
+        -jnp.inf,
+    )
+    step = jnp.asarray(step_of_column(c, seeds=seeds, degree=degree))
+
+    # Always-on reductions over the FULL buffer (not just the traced prefix).
+    bands = ctx.band_ids[safe]
+    one_hot = jax.nn.one_hot(bands, ctx.n_bands, dtype=jnp.int32)
+    band_hist = (one_hot * valid[..., None].astype(jnp.int32)).sum(axis=1)
+    hub_evals = (ctx.hub_mask[safe] & valid).sum(axis=-1).astype(jnp.int32)
+
+    n_steps = (v - seeds) // max(degree, 1)
+    per_round = valid[:, seeds:seeds + n_steps * degree]
+    per_round = per_round.reshape(b, n_steps, degree).any(axis=-1)
+    steps_to_converge = per_round.sum(axis=-1).astype(jnp.int32)
+
+    return WalkTrace(
+        ids=jnp.where(tr_valid, ids, -1).astype(jnp.int32),
+        scores=scores,
+        step=step,
+        band_hist=band_hist,
+        hub_evals=hub_evals,
+        steps_to_converge=steps_to_converge,
+    )

@@ -496,6 +496,44 @@ def test_beam_step_all_done_is_noop(rng):
     assert np.all(np.asarray(p.n_scored) == 0)
 
 
+def test_beam_step_n_dead_contract_both_backends(rng):
+    """Without ``live=`` BOTH step implementations report ``n_dead=None``
+    (not zeros — None means "not measured", and the serve/search layers key
+    off that); with a mask both report identical int32 counts."""
+    args = _random_step_state(rng, 4, 8, 4, 16, 50, 8)
+    assert beam_step_ref(*args).n_dead is None
+    assert beam_step(*args).n_dead is None
+
+    live = jnp.asarray(rng.random(50) < 0.7)
+    r = beam_step_ref(*args, live=live)
+    p = beam_step(*args, live=live)
+    assert r.n_dead is not None and p.n_dead is not None
+    assert np.asarray(r.n_dead).dtype == np.int32
+    assert np.array_equal(np.asarray(r.n_dead), np.asarray(p.n_dead))
+    assert np.array_equal(np.asarray(r.n_scored), np.asarray(p.n_scored))
+    assert (np.asarray(r.n_dead) <= np.asarray(r.n_scored)).all()
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_beam_search_dead_evals_none_without_live(rng, backend):
+    """The full walk mirrors the step contract: ``SearchResult.dead_evals``
+    is None unless a tombstone mask was supplied."""
+    from repro.core.build import build_graph
+    from repro.core.search import beam_search
+
+    items = jnp.asarray(rng.normal(size=(100, 8)).astype(np.float32))
+    g = build_graph(items, max_degree=4, ef_construction=8, insert_batch=32)
+    q = jnp.asarray(rng.normal(size=(3, 8)).astype(np.float32))
+    init = jnp.broadcast_to(g.entry[None, None], (3, 1)).astype(jnp.int32)
+    r = beam_search(g, q, init, pool_size=8, max_steps=8, k=3,
+                    backend=backend)
+    assert r.dead_evals is None
+    r_live = beam_search(g, q, init, pool_size=8, max_steps=8, k=3,
+                         backend=backend, live=jnp.ones(100, bool))
+    assert r_live.dead_evals is not None
+    assert (np.asarray(r_live.dead_evals) == 0).all()
+
+
 # ---------------------------------------------------------------------------
 # beam_step: full-walk parity — pallas backend vs reference beam_search
 # ---------------------------------------------------------------------------

@@ -1,0 +1,421 @@
+"""Observability-layer suite (repro.obs + the trace plumbing through
+core/search and the serving loop).
+
+The load-bearing pins, in dependency order:
+
+  * trace-off parity  — passing ``trace=None`` (the default) is BIT-identical
+    to the pre-observability walk on every axis (backend × storage × index
+    kind), and passing a TraceContext leaves ids/scores/evals bit-identical
+    too: the trace is computed post-loop from the visited buffer, never
+    inside the walk.
+  * trace semantics   — static shapes from (trace_cap, n_bands), the
+    column->step map, band_hist rows summing exactly to the walk's eval
+    counts, hub/steps reductions bounded by the walk geometry.
+  * norm bias         — on a lognormal (word_like) catalog the top norm
+    decile receives the MAJORITY of evaluations (the paper's Fig-5 claim,
+    now a regression pin).
+  * serve integration — a registry+trace run of the virtual-clock loop keeps
+    ZERO steady-state recompiles, replays to a bit-identical registry, and
+    its JSONL export renders through scripts/obs_report.py alone.
+  * registry contract — get-or-create metrics, hard error on type drift,
+    Prometheus text shape, JSONL round-trip.
+"""
+import functools
+import io
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import IpNSW, IpNSWPlus
+from repro.core.search import beam_search
+from repro.data import mips_dataset, mips_queries
+from repro.obs import (
+    MetricsRegistry,
+    make_trace_context,
+    step_of_column,
+    top_band_share,
+    write_metrics,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Large enough for the paper's norm-bias concentration to manifest (the
+# top-decile pin sits near 0.87 here; at N=400 it is only ~0.42).
+N, D, K = 2000, 24, 5
+
+
+@functools.lru_cache(maxsize=None)
+def _items():
+    # lognormal: the word_like / Fig-5 regime where norm bias is strongest
+    return jnp.asarray(mips_dataset(N, D, "lognormal", seed=3))
+
+
+@functools.lru_cache(maxsize=None)
+def _index():
+    return IpNSW(max_degree=8, ef_construction=16, insert_batch=256).build(
+        _items()
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _plus_index():
+    return IpNSWPlus(max_degree=8, ef_construction=16,
+                     insert_batch=256).build(_items())
+
+
+@functools.lru_cache(maxsize=None)
+def _ctx(trace_cap: int = 64, n_bands: int = 10):
+    index = _index()
+    norms = np.linalg.norm(np.asarray(index.graph.items), axis=1)
+    return make_trace_context(norms, np.asarray(index.graph.adj),
+                              trace_cap=trace_cap, n_bands=n_bands)
+
+
+def _queries(b=8, seed=7):
+    return jnp.asarray(mips_queries(b, D, seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# trace-off / trace-on parity — the walk is untouched on every axis
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("storage", ["f32", "int8"])
+def test_trace_leaves_walk_bit_identical_ipnsw(backend, storage):
+    q = _queries()
+    base = _index().search(q, k=K, ef=16, backend=backend, storage=storage)
+    traced = _index().search(q, k=K, ef=16, backend=backend,
+                             storage=storage, trace=_ctx())
+    assert base.trace is None
+    assert traced.trace is not None
+    for field in ("ids", "scores", "evals", "visited"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(base, field)),
+            np.asarray(getattr(traced, field)),
+            err_msg=f"{backend}/{storage}: {field} changed under tracing",
+        )
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_trace_leaves_walk_bit_identical_plus(backend):
+    q = _queries()
+    base = _plus_index().search(q, k=K, ef=16, backend=backend)
+    traced = _plus_index().search(q, k=K, ef=16, backend=backend,
+                                  trace=_ctx())
+    assert base.trace is None and traced.trace is not None
+    for field in ("ids", "scores", "ip_evals", "ang_evals"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(base, field)),
+            np.asarray(getattr(traced, field)),
+            err_msg=f"plus/{backend}: {field} changed under tracing",
+        )
+
+
+def test_trace_context_size_mismatch_raises():
+    wrong = make_trace_context(np.ones(N + 3, np.float32))
+    with pytest.raises(ValueError, match="trace context covers"):
+        _index().search(_queries(2), k=K, ef=16, trace=wrong)
+
+
+# ---------------------------------------------------------------------------
+# trace semantics — shapes, step map, reduction invariants
+# ---------------------------------------------------------------------------
+
+
+def test_trace_shapes_and_step_map():
+    b, cap, bands = 6, 32, 10
+    r = _index().search(_queries(b), k=K, ef=16,
+                        trace=_ctx(trace_cap=cap, n_bands=bands))
+    tr = r.trace
+    assert tr.ids.shape == (b, cap) and tr.scores.shape == (b, cap)
+    assert tr.step.shape == (cap,)
+    assert tr.band_hist.shape == (b, bands)
+    assert tr.hub_evals.shape == (b,) and tr.steps_to_converge.shape == (b,)
+    # the static column->step map: seed columns are step 0, later columns
+    # belong to non-decreasing expansion rounds
+    step = np.asarray(tr.step)
+    assert step[0] == 0
+    assert (np.diff(step) >= 0).all()
+    # ids prefix IS the visited prefix; pads are -1 with -inf scores
+    np.testing.assert_array_equal(
+        np.asarray(tr.ids), np.asarray(r.visited[:, :cap])
+    )
+    pads = np.asarray(tr.ids) < 0
+    assert np.isneginf(np.asarray(tr.scores)[pads]).all()
+    assert np.isfinite(np.asarray(tr.scores)[~pads]).all()
+
+
+def test_trace_cap_truncates_and_caps_at_buffer():
+    r_small = _index().search(_queries(4), k=K, ef=16,
+                              trace=_ctx(trace_cap=8))
+    assert r_small.trace.ids.shape[1] == 8
+    huge = 10_000
+    r_full = _index().search(_queries(4), k=K, ef=16,
+                             trace=_ctx(trace_cap=huge))
+    v = r_full.visited.shape[1]
+    assert r_full.trace.ids.shape[1] == v < huge
+    np.testing.assert_array_equal(
+        np.asarray(r_full.trace.ids), np.asarray(r_full.visited)
+    )
+
+
+def test_step_of_column_map():
+    m = step_of_column(1 + 3 * 4, seeds=1, degree=4)
+    np.testing.assert_array_equal(
+        m, [0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3]
+    )
+
+
+@pytest.mark.parametrize("storage", ["f32", "int8"])
+def test_band_hist_sums_to_evals(storage):
+    r = _index().search(_queries(), k=K, ef=16, storage=storage,
+                        trace=_ctx())
+    tr = r.trace
+    np.testing.assert_array_equal(
+        np.asarray(tr.band_hist).sum(axis=1), np.asarray(r.evals)
+    )
+    assert (np.asarray(tr.hub_evals) <= np.asarray(r.evals)).all()
+    assert (np.asarray(tr.steps_to_converge) >= 1).all()
+    assert (np.asarray(tr.steps_to_converge) <= int(r.steps)).all()
+
+
+def test_padded_rows_trace_as_zero():
+    q = _queries(4)
+    valid = jnp.asarray([True, True, False, False])
+    r = _index().search(q, k=K, ef=16, valid=valid, trace=_ctx())
+    band = np.asarray(r.trace.band_hist)
+    assert band[2:].sum() == 0 and band[:2].sum() > 0
+    assert (np.asarray(r.trace.ids)[2:] == -1).all()
+
+
+def test_lognormal_top_decile_gets_majority_of_evals():
+    """The paper's Fig-5 norm-bias claim as a live pin: on a heavy-tailed
+    catalog the top norm decile receives > 50% of all similarity evals."""
+    r = _index().search(_queries(16, seed=11), k=K, ef=16, trace=_ctx())
+    share = top_band_share(np.asarray(r.trace.band_hist).sum(axis=0))
+    assert share > 0.5, f"top-decile share {share:.3f} <= 0.5"
+
+
+def test_make_trace_context_validation_and_clipping():
+    with pytest.raises(ValueError, match="size"):
+        make_trace_context(np.ones(10, np.float32), size=11)
+    with pytest.raises(ValueError, match="trace_cap"):
+        make_trace_context(np.ones(10, np.float32), trace_cap=0)
+    # out-of-range norms (capacity slots, churned-in items) clip into the
+    # end bands instead of indexing out of bounds
+    norms = np.concatenate([np.linspace(1, 2, 100), [0.0, 99.0]])
+    ctx = make_trace_context(norms.astype(np.float32), size=100)
+    ids = np.asarray(ctx.band_ids)
+    assert ids[100] == 0 and ids[101] == 9
+
+
+# ---------------------------------------------------------------------------
+# registry contract
+# ---------------------------------------------------------------------------
+
+
+def test_registry_get_or_create_and_type_drift():
+    reg = MetricsRegistry()
+    c = reg.counter("x_total")
+    assert reg.counter("x_total") is c
+    c.inc(2)
+    assert reg.get("x_total").value == 2
+    with pytest.raises(TypeError, match="x_total"):
+        reg.gauge("x_total")
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    vec = reg.vector("by_band", 4, label="band")
+    vec.add([1, 2, 3, 4])
+    with pytest.raises(ValueError):
+        vec.add([1, 2])
+    h = reg.histogram("lat_seconds", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(5.0)
+    assert h.count == 2 and h.counts == [1, 0, 1]
+
+
+def test_registry_prometheus_text():
+    reg = MetricsRegistry()
+    reg.counter("req_total", "requests").inc(3)
+    reg.gauge("debt").set(0.5)
+    h = reg.histogram("lat_seconds", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    reg.vector("by_band", 2, label="band").add([1, 2])
+    text = reg.to_prometheus()
+    assert "# TYPE req_total counter\nreq_total 3" in text
+    assert "debt 0.5" in text
+    assert 'lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 2' in text
+    assert "lat_seconds_count 2" in text
+    assert 'by_band{band="1"} 2' in text
+
+
+def test_registry_jsonl_roundtrip(tmp_path):
+    from repro.obs import load_jsonl
+
+    reg = MetricsRegistry()
+    reg.counter("a_total").inc(7)
+    reg.histogram("h_seconds", buckets=(1.0,)).observe(0.5)
+    reg.event("response", 1.25, rid=0, latency_s=0.01)
+    path = str(tmp_path / "run.jsonl")
+    assert write_metrics(reg, path, meta={"mode": "test"}) == "jsonl"
+    snap = load_jsonl(path)
+    assert snap["meta"]["mode"] == "test"
+    assert snap["metrics"]["a_total"]["value"] == 7
+    assert snap["metrics"]["h_seconds"]["count"] == 1
+    assert snap["events"] == [
+        {"event": "response", "t": 1.25, "rid": 0, "latency_s": 0.01}
+    ]
+    prom = str(tmp_path / "run.prom")
+    assert write_metrics(reg, prom) == "prometheus"
+    assert "a_total 7" in open(prom).read()
+
+
+def test_registry_span_and_global_swap():
+    from repro.obs import get_registry, set_registry
+
+    reg = MetricsRegistry()
+    prev = set_registry(reg)
+    try:
+        with get_registry().span("phase"):
+            pass
+        assert reg.get("phase_seconds").count == 1
+    finally:
+        set_registry(prev)
+
+
+def test_build_emits_phase_spans():
+    from repro.obs import get_registry, set_registry
+
+    reg = MetricsRegistry()
+    prev = set_registry(reg)
+    try:
+        IpNSW(max_degree=8, ef_construction=16, insert_batch=256).build(
+            _items()
+        )
+    finally:
+        set_registry(prev)
+    assert reg.get("build_bootstrap_seconds").count >= 1
+    assert reg.get("build_insert_seconds").count >= 1
+
+
+# ---------------------------------------------------------------------------
+# serving-loop integration — zero steady recompiles, deterministic registry,
+# and the obs_report.py CLI end-to-end from the JSONL alone
+# ---------------------------------------------------------------------------
+
+
+def _serve_once(registry, trace_ctx, n_requests=48):
+    from repro.launch.serve_loop import (
+        BucketLadder,
+        LinearServiceModel,
+        ServeLoop,
+        VirtualClock,
+        poisson_trace,
+    )
+
+    queries = mips_queries(n_requests, D, seed=5)
+    trace = poisson_trace(queries, rate_qps=400.0, seed=0, ef=16,
+                          classes=("interactive", "standard", "relaxed"))
+    loop = ServeLoop(
+        _index(), ladder=BucketLadder(batches=(2, 4), efs=(8, 16)),
+        clock=VirtualClock(), k=K, service_model=LinearServiceModel(),
+        registry=registry, trace_ctx=trace_ctx,
+    )
+    return loop.run(trace)
+
+
+def test_serve_loop_traced_keeps_zero_steady_recompiles():
+    reg = MetricsRegistry()
+    stats = _serve_once(reg, _ctx())
+    s = stats.summary()
+    assert s["served"] == 48
+    assert s["recompiles_steady"] == 0
+    assert reg.get("serve_recompiles_steady").value == 0
+    assert reg.get("serve_requests_total").value == 48
+    assert reg.get("serve_batches_total").value == s["batches"]
+    # the always-on walk reductions flowed through the executor
+    band = reg.get("walk_evals_by_band").values
+    assert band.sum() == reg.get("walk_evals_total").value > 0
+    assert reg.get("walk_hub_evals_total").value > 0
+    assert reg.get("serve_latency_seconds").count == 48
+    # lognormal catalog => the Fig-5 signal is visible from served traffic
+    assert top_band_share(band) > 0.5
+
+
+def test_serve_loop_registry_is_deterministic():
+    """Virtual clock + injected registry => bit-identical exports across
+    runs (the registry never reads wall time on the serve path)."""
+    regs = []
+    for _ in range(2):
+        reg = MetricsRegistry()
+        _serve_once(reg, _ctx())
+        regs.append(reg)
+    assert regs[0].collect() == regs[1].collect()
+    assert regs[0].events == regs[1].events
+
+
+def test_obs_report_renders_exported_jsonl(tmp_path):
+    """The acceptance path: a traced serve run's JSONL alone reproduces the
+    norm-bias concentration through scripts/obs_report.py."""
+    reg = MetricsRegistry()
+    _serve_once(reg, _ctx())
+    path = str(tmp_path / "serve.jsonl")
+    write_metrics(reg, path, meta={"mode": "loop", "profile": "lognormal"})
+
+    script = os.path.join(ROOT, "scripts", "obs_report.py")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    res = subprocess.run([sys.executable, script, path],
+                         capture_output=True, text=True, env=env)
+    assert res.returncode == 0, res.stdout + res.stderr
+    out = res.stdout
+    assert "evals by catalog norm band" in out
+    assert "latency timeline" in out
+    share = float(
+        [ln for ln in out.splitlines()
+         if ln.startswith("top_decile_share=")][0].split("=")[1]
+    )
+    assert share > 0.5
+
+
+def test_report_function_summary(tmp_path):
+    sys.path.insert(0, os.path.join(ROOT, "scripts"))
+    try:
+        import obs_report
+    finally:
+        sys.path.pop(0)
+    reg = MetricsRegistry()
+    _serve_once(reg, _ctx())
+    path = str(tmp_path / "serve.jsonl")
+    write_metrics(reg, path)
+    buf = io.StringIO()
+    summary = obs_report.report(path, out=buf)
+    assert summary["top_decile_share"] > 0.5
+    assert summary["serve_requests_total"] == 48
+    assert 0.0 < summary["hub_eval_share"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# deprecation shim — core.metrics forwards to obs.recall
+# ---------------------------------------------------------------------------
+
+
+def test_core_metrics_shim_warns_and_matches():
+    import importlib
+    import warnings
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        import repro.core.metrics as legacy
+        importlib.reload(legacy)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+
+    from repro.obs.recall import recall_at_k
+    assert legacy.recall_at_k is recall_at_k

@@ -24,7 +24,7 @@ from repro.core.norms import (
     theorem1_probability,
     theorem2_conditional,
 )
-from repro.core.metrics import recall_at_k
+from repro.obs.recall import recall_at_k
 from repro.kernels.topk_merge import topk_merge, topk_merge_ref
 from repro.models.recsys.embedding import embedding_bag, embedding_bag_ragged
 
