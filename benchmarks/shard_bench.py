@@ -1,0 +1,164 @@
+"""Shard-routing benchmark: what norm-banded partitioning plus upper-bound
+routing buys over the round-robin split (row schema: docs/BENCHMARKS.md,
+``bench=shard``).
+
+For each norm profile, four rows on the same catalog and query set:
+
+  partition=roundrobin route=none         — the legacy baseline: every query
+                                            visits every shard.
+  partition=norm_bands route=none         — banding alone: same exhaustive
+                                            merge, proves the partition
+                                            itself costs no recall.
+  partition=norm_bands route=upper_bound  — the headline row: shards whose
+                                            Cauchy-Schwarz bound
+                                            ``max_norm_s * ||q||`` cannot
+                                            beat the running k-th score are
+                                            skipped (provably recall-free).
+  ... + storage=tiered                    — the routed run with the hot band
+                                            f32 and every cold band int8.
+
+``shards_visited_mean`` / ``skipped_frac`` come from the driver's
+``RouteStats``; ``evals_saved_frac`` and ``visited_saved_frac`` are measured
+against the round-robin baseline row.  The CI gate
+(scripts/check_bench_json.py) enforces the ISSUE-10 acceptance bar on the
+lognormal (heavy norm tail) profile: ``skipped_frac > 0``, mean shards
+visited reduced by >= 30%, recall@10 within 0.01 of the baseline.
+
+All rows use the single-device reference driver — it DEFINES the routing
+semantics (core/distributed.py) and runs identically on any host; the
+device path's agreement with it is pinned by tests/test_shard_routing.py.
+
+  PYTHONPATH=src:. python benchmarks/shard_bench.py
+  PYTHONPATH=src:. python benchmarks/shard_bench.py --quick       # CI-sized
+  REPRO_BENCH_QUICK=1 ...                                         # same
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def _recall(ids, gt) -> float:
+    import numpy as np
+
+    ids, gt = np.asarray(ids), np.asarray(gt)
+    hits = sum(len(set(ids[i][ids[i] >= 0]) & set(gt[i]))
+               for i in range(len(gt)))
+    return hits / (gt.shape[0] * gt.shape[1])
+
+
+def shard_rows(
+    profile: str = "word_like",
+    *,
+    quick: bool = True,
+    index_kind: str = "ipnsw",
+    seed: int = 0,
+) -> list:
+    """All ``bench=shard`` rows for one norm profile."""
+    import numpy as np
+    import jax.numpy as jnp
+    from benchmarks import common
+    from repro.core.distributed import (
+        build_sharded, sharded_search_reference,
+    )
+    from repro.data import mips_dataset, mips_queries
+
+    # d=16 keeps query-item cosines high enough that the k-th score crosses
+    # the cold bands' bounds — the regime the lognormal gate measures; the
+    # full run uses the larger catalog at the same dimensionality.
+    n, d, p = (2000, 16, 8) if quick else (10000, 16, 8)
+    n_queries = 32 if quick else 256
+    k, ef = common.K, 32
+    plus = index_kind == "ipnsw_plus"
+
+    prof = dict(common.PROFILES[profile])
+    prof.pop("n_mult", None)
+    items = jnp.asarray(mips_dataset(n, d, **prof))
+    queries = jnp.asarray(mips_queries(n_queries, d, seed=100 + seed))
+    gt = np.argsort(-(np.asarray(queries) @ np.asarray(items).T),
+                    axis=1, kind="stable")[:, :k]
+
+    build_kw = dict(
+        plus=plus, build_backend="scan", max_degree=16, ef_construction=32,
+        insert_batch=64,
+    )
+    indexes = {
+        "roundrobin": build_sharded(items, p, partition="roundrobin",
+                                    **build_kw),
+        "norm_bands": build_sharded(items, p, partition="norm_bands",
+                                    storage="int8", **build_kw),
+    }
+
+    base = {
+        "bench": "shard",
+        "profile": profile,
+        "norm_profile": prof["profile"],
+        "index": index_kind,
+        "n": n,
+        "dim": d,
+        "n_shards": p,
+        "k": k,
+        "ef": ef,
+    }
+    cells = [
+        ("roundrobin", "none", "f32"),
+        ("norm_bands", "none", "f32"),
+        ("norm_bands", "upper_bound", "f32"),
+        ("norm_bands", "upper_bound", "tiered"),
+    ]
+    rows = []
+    baseline = None
+    for partition, route, storage in cells:
+        ids, _, evals, stats = sharded_search_reference(
+            indexes[partition], queries, k=k, ef=ef, plus=plus,
+            route=route, storage=storage, return_stats=True,
+        )
+        visited = float(np.asarray(stats.shards_visited).mean())
+        skipped = float(np.asarray(stats.bound_skips).mean()) / p
+        epq = float(np.asarray(evals).mean())
+        row = {
+            **base,
+            "partition": partition,
+            "route": route,
+            "storage": storage,
+            "shards_visited_mean": round(visited, 3),
+            "skipped_frac": round(skipped, 4),
+            "evals_per_query": round(epq, 1),
+            "recall_at_10": round(_recall(ids, gt), 4),
+        }
+        if baseline is None:
+            baseline = row
+        row["visited_saved_frac"] = round(
+            1.0 - visited / baseline["shards_visited_mean"], 4)
+        row["evals_saved_frac"] = round(
+            1.0 - epq / baseline["evals_per_query"], 4)
+        rows.append(row)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (same as REPRO_BENCH_QUICK=1)")
+    ap.add_argument("--profiles", nargs="*", default=None,
+                    help="benchmarks.common.PROFILES names "
+                         "(default: music_like word_like)")
+    ap.add_argument("--index", default="ipnsw",
+                    choices=["ipnsw", "ipnsw_plus"])
+    args = ap.parse_args()
+    if args.quick:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+
+    from benchmarks.common import QUICK, emit
+
+    quick = args.quick or QUICK
+    profiles = args.profiles or ["music_like", "word_like"]
+    first = True
+    for profile in profiles:
+        rows = shard_rows(profile, quick=quick, index_kind=args.index)
+        emit(rows, header=first)
+        first = False
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,13 @@ observability contract is broken:
       recompiles (trace shapes are static), and the virtual-clock p50 must
       be identical base-vs-traced (observability must not change
       scheduling).
+  shard — the norm-banded routing contract (core/distributed.py, ISSUE 10):
+      on the lognormal (heavy norm tail) profile the
+      ``norm_bands``+``upper_bound`` rows must actually skip shards
+      (``skipped_frac > 0``), cut mean shards visited by >= 30% vs the
+      round-robin baseline, and hold recall@10 within 0.01 of it — the
+      bound-skip rule is provably recall-free, so any recall gap means the
+      routing layer is broken, not "tuned differently".
 
 Additionally EVERY row of EVERY family must carry the provenance columns
 ``jax_version`` / ``git_sha`` / ``device`` (benchmarks/common.py stamps
@@ -213,6 +220,84 @@ def check_obs_overhead(rows: list) -> list:
     return errors
 
 
+SHARD_COLS = {
+    "profile", "norm_profile", "partition", "route", "storage", "n_shards",
+    "shards_visited_mean", "skipped_frac", "evals_per_query", "recall_at_10",
+    "visited_saved_frac", "evals_saved_frac",
+}
+
+# ISSUE-10 acceptance bar: on the heavy-norm-tail profile, upper-bound
+# routing must cut mean shards visited by at least this fraction vs the
+# round-robin baseline, at equal recall (within SHARD_RECALL_SLACK).
+SHARD_VISITED_SAVINGS = 0.30
+SHARD_RECALL_SLACK = 0.01
+
+
+def check_shard(rows: list) -> list:
+    errors = []
+    missing = _missing_cols(rows, SHARD_COLS)
+    if missing:
+        errors.append(f"shard rows missing columns: {missing[0]}")
+        return errors
+    # Pair every routed norm_bands row with the roundrobin baseline of its
+    # (profile, index, n, n_shards) group.
+    groups: dict = {}
+    for r in rows:
+        groups.setdefault(
+            (r["profile"], r.get("index"), r.get("n"), r["n_shards"]), []
+        ).append(r)
+    for key, group in groups.items():
+        tag = f"shard[{key[0]}]"
+        baselines = [r for r in group
+                     if r["partition"] == "roundrobin" and r["route"] == "none"]
+        routed = [r for r in group
+                  if r["partition"] == "norm_bands"
+                  and r["route"] == "upper_bound"]
+        if not baselines:
+            errors.append(f"{tag}: no roundrobin route=none baseline row")
+            continue
+        if not routed:
+            errors.append(f"{tag}: no norm_bands route=upper_bound row")
+            continue
+        base = baselines[0]
+        lognormal = all(r["norm_profile"] == "lognormal" for r in group)
+        for r in routed:
+            rtag = f"{tag}[storage={r.get('storage')}]"
+            drecall = float(r["recall_at_10"]) - float(base["recall_at_10"])
+            if drecall < -SHARD_RECALL_SLACK:
+                errors.append(
+                    f"{rtag}: routed recall {r['recall_at_10']} is "
+                    f"{-drecall:.4f} below the roundrobin baseline "
+                    f"{base['recall_at_10']} (budget {SHARD_RECALL_SLACK}) — "
+                    "the skip rule dropped a shard that could contribute"
+                )
+            if not lognormal:
+                continue
+            if float(r["skipped_frac"]) <= 0.0:
+                errors.append(
+                    f"{rtag}: skipped_frac == 0 under the lognormal profile "
+                    "— the norm bias must produce bound skips"
+                )
+            saved = 1.0 - (
+                float(r["shards_visited_mean"])
+                / float(base["shards_visited_mean"])
+            )
+            if saved < SHARD_VISITED_SAVINGS:
+                errors.append(
+                    f"{rtag}: routing saved only {saved:.1%} of shard visits "
+                    f"vs roundrobin (bar {SHARD_VISITED_SAVINGS:.0%}, "
+                    f"{r['shards_visited_mean']} vs "
+                    f"{base['shards_visited_mean']})"
+                )
+        for r in group:
+            if not 0.0 < float(r["recall_at_10"]) <= 1.0:
+                errors.append(
+                    f"{tag}: implausible recall {r['recall_at_10']} "
+                    f"(partition={r['partition']}, route={r['route']})"
+                )
+    return errors
+
+
 PROVENANCE_COLS = {"jax_version", "git_sha", "device"}
 
 
@@ -239,6 +324,7 @@ FAMILIES = {
     "serve": check_serve,
     "churn": check_churn,
     "obs_overhead": check_obs_overhead,
+    "shard": check_shard,
 }
 
 

@@ -4,11 +4,17 @@ stage (--index ipnsw_plus), the ip-NSW baseline, or the exact scan.
   PYTHONPATH=src python -m repro.launch.serve --index ipnsw_plus \
       --n-items 20000 --batch 256 --ef 40 [--shards 4] \
       [--backend pallas] [--build-backend scan] [--commit-backend pallas] \
-      [--commit-tile auto|N] [--storage int8]
+      [--commit-tile auto|N] [--storage int8|tiered] \
+      [--partition norm_bands] [--route upper_bound]
 
 With --shards > 1, items are row-sharded into shard-local sub-indexes and
 queries fan out via shard_map (requires that many local devices; use
 XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU).
+``--partition norm_bands`` cuts the catalog into descending-norm bands and
+``--route upper_bound`` lets each query skip shards whose Cauchy-Schwarz
+bound cannot reach its running k-th score (core/distributed.py); the report
+then carries shards_visited_mean / skipped_mean.  ``--storage tiered``
+serves the hot top band f32 and the cold bands int8.
 
 ``--loop`` switches from the one-shot timed batch to the continuous-batching
 serving loop (launch/serve_loop.py): a Poisson request trace is scheduled
@@ -63,10 +69,23 @@ def main():
                          "positive int, or 'auto' to let the planner pick "
                          "from the norm skew (DESIGN.md §7)")
     ap.add_argument("--storage", default="f32",
-                    choices=["f32", "int8"],
+                    choices=["f32", "int8", "tiered"],
                     help="item store the walks stream "
                          "(storage.STORAGE_BACKENDS; int8 = quantized walk "
-                         "+ exact fp32 rerank, DESIGN.md §8)")
+                         "+ exact fp32 rerank, DESIGN.md §8; tiered = hot "
+                         "top band f32, cold bands int8 — sharded only, "
+                         "needs --route upper_bound)")
+    ap.add_argument("--partition", default="roundrobin",
+                    choices=["roundrobin", "norm_bands"],
+                    help="sharded catalog split "
+                         "(distributed.PARTITION_BACKENDS; norm_bands = "
+                         "count-balanced bands of descending ||x|| with "
+                         "per-shard max_norm routing bounds)")
+    ap.add_argument("--route", default="none",
+                    choices=["none", "upper_bound"],
+                    help="sharded query routing (distributed.ROUTE_MODES; "
+                         "upper_bound skips shards whose max_norm*||q|| "
+                         "cannot beat the running k-th score)")
     ap.add_argument("--loop", action="store_true",
                     help="continuous-batching serving loop instead of the "
                          "one-shot timed batch (launch/serve_loop.py)")
@@ -97,6 +116,15 @@ def main():
                          "along at unchanged walk outputs (repro.obs)")
     args = ap.parse_args()
 
+    if args.shards <= 1 and (args.route != "none"
+                             or args.partition != "roundrobin"
+                             or args.storage == "tiered"):
+        raise SystemExit("--partition/--route/--storage tiered shape the "
+                         "sharded fan-out; add --shards N")
+    if args.storage == "tiered" and args.route != "upper_bound":
+        raise SystemExit("--storage tiered rides the routed two-phase walk; "
+                         "add --route upper_bound")
+
     compile_events0 = sl.xla_compile_events()
 
     items = jnp.asarray(mips_dataset(args.n_items, args.dim, args.profile, seed=0))
@@ -116,6 +144,7 @@ def main():
         return
 
     trace_ctx = None
+    route_note = ""
     if args.shards > 1:
         from repro.core.distributed import build_sharded, sharded_search
 
@@ -130,6 +159,7 @@ def main():
                               commit_backend=args.commit_backend,
                               commit_tile=args.commit_tile,
                               storage=args.storage,
+                              partition=args.partition,
                               max_degree=16, ef_construction=32,
                               insert_batch=512)
         from repro.launch.mesh import make_mesh_compat
@@ -138,17 +168,25 @@ def main():
         # jit the whole fan-out: sharded_search alone rebuilds its shard_map
         # closure per call, so without this the "warmup" would not cache
         # anything and the timed call would still pay trace+compile.
+        # Routing happens INSIDE the program (two-phase masked walk) so the
+        # jit stays compile-once; return_stats threads the visit counts out.
         search = jax.jit(functools.partial(
             sharded_search, mesh=mesh, k=args.k, ef=args.ef,
             backend=args.backend, storage=args.storage,
+            route=args.route, return_stats=True,
             plus=args.index == "ipnsw_plus"))
         jax.block_until_ready(search(index, queries)[0])  # compile warmup
         t0 = time.perf_counter()
-        ids, _, evals = search(index, queries)
+        ids, _, evals, rstats = search(index, queries)
         jax.block_until_ready(ids)
         dt = time.perf_counter() - t0
         rec = recall_at_k(np.asarray(ids), gt)
         ev = float(np.mean(np.asarray(evals)))
+        visited = float(np.mean(np.asarray(rstats.shards_visited)))
+        skipped = float(np.mean(np.asarray(rstats.bound_skips)))
+        route_note = (f"partition={args.partition} route={args.route} "
+                      f"shards_visited_mean={visited:.2f} "
+                      f"skipped_mean={skipped:.2f} ")
     elif args.index == "bruteforce":
         t0 = time.perf_counter()
         _, ids = exact_topk(queries, items, k=args.k)
@@ -189,7 +227,7 @@ def main():
             ).inc(int(np.asarray(r.trace.hub_evals).sum()))
 
     print(f"[serve] index={args.index} shards={args.shards} "
-          f"storage={args.storage} "
+          f"storage={args.storage} {route_note}"
           f"N={args.n_items} B={args.batch} ef={args.ef}: "
           f"recall@{args.k}={rec:.3f} evals/q={ev:.0f} "
           f"({dt/args.batch*1e3:.2f} ms/query batch-amortized) "

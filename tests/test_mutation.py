@@ -269,6 +269,90 @@ def test_sharded_interior_delete_cannot_surface():
     assert (ids2 >= 0).all() and np.isfinite(np.asarray(scores2)).all()
 
 
+def test_sharded_banded_churn_keeps_invariants_and_recall():
+    """ISSUE-10 sharded-churn acceptance: upserts and deletes on a
+    norm-banded ShardedMutable — including killing an entire top band's
+    hubs — keep the per-band I1–I6 invariants green, keep tombstoned gids
+    and widened-norm items consistent with the routing bound, and land
+    post-relink routed recall@10 within 0.02 of a fresh banded rebuild of
+    the same live catalog."""
+    from repro.core.distributed import (
+        ShardedMutable, build_sharded, sharded_search_reference,
+    )
+
+    p = 4
+    items = _items("lognormal", n=256, seed=7)
+    queries = jnp.asarray(mips_queries(32, D, seed=77))
+    sm = ShardedMutable(items, p, plus=False, headroom=64, max_degree=8,
+                        ef_construction=16, insert_batch=64)
+    assert sm.check_invariants() == []
+
+    def routed(storage="f32"):
+        snap = sm.snapshot(storage=storage)
+        return sharded_search_reference(
+            snap, queries, k=K, ef=64, plus=False, route="upper_bound",
+            storage=storage, return_stats=True,
+        )
+
+    def live_recall(ids):
+        gids, live_items = sm.live_items()
+        gt_rows = np.argsort(
+            -(np.asarray(queries) @ live_items.T), axis=1, kind="stable"
+        )[:, :K]
+        gt = gids[gt_rows]          # map row positions back to global ids
+        return _recall(np.asarray(ids), gt)
+
+    base = live_recall(routed()[0])
+
+    # churn: delete a third of the catalog, upsert replacements whose norms
+    # straddle the band edges — incl. outliers ABOVE band 0's max, which
+    # must widen its recorded bound, not break it
+    rng = np.random.default_rng(3)
+    sm.delete(rng.choice(sm.live_gids(), size=80, replace=False))
+    fresh_items = _items("lognormal", n=96, seed=8).copy()
+    fresh_items[:4] *= 10.0  # norm outliers routed to band 0, widening it
+    new_gids = sm.upsert(fresh_items)
+    assert sm.check_invariants() == []
+    assert len(set(new_gids.tolist())) == 96
+
+    # the routing bound survives churn: every band's live max norm is
+    # bounded by its recorded max_norm
+    snap = sm.snapshot()
+    norms = np.linalg.norm(np.asarray(snap.ip.items), axis=-1)
+    live = np.asarray(snap.live, bool)
+    for s in range(p):
+        if live[s].any():
+            assert norms[s][live[s]].max() <= float(snap.max_norm[s]) + 1e-5
+
+    # adversarial: tombstone ALL of the top band's hubs (all but one member)
+    killed = sm.kill_hubs(0, k=sm.capacity)
+    assert len(killed) > 0
+    assert sm.check_invariants() == []
+
+    # full repair, then the acceptance bar vs a fresh banded rebuild
+    while sm.relink_debt():
+        sm.relink(64)
+    assert sm.check_invariants() == []
+    ids_post, _, _, stats = routed()
+    # no dead gid may surface
+    dead = set(map(int, killed)) | {
+        int(g) for g in range(256) if int(g) not in set(sm.live_gids())
+    }
+    assert not (set(np.asarray(ids_post).ravel().tolist()) - {-1}) & dead
+    rec_post = live_recall(ids_post)
+
+    gids, live_items = sm.live_items()
+    fresh = build_sharded(jnp.asarray(live_items), p, plus=False,
+                          partition="norm_bands", max_degree=8,
+                          ef_construction=16, insert_batch=64)
+    ids_f, _, _ = sharded_search_reference(
+        fresh, queries, k=K, ef=64, plus=False, route="upper_bound")
+    gt_rows = np.argsort(-(np.asarray(queries) @ live_items.T),
+                         axis=1, kind="stable")[:, :K]
+    rec_fresh = _recall(np.asarray(ids_f), gt_rows)
+    assert rec_post >= rec_fresh - 0.02, (rec_post, rec_fresh, base)
+
+
 # --------------------------------------------------------- churn end-to-end
 
 

@@ -17,6 +17,7 @@ except ImportError:  # container has no hypothesis; CI installs the real one
 
 QUICK = os.environ.get("REPRO_TEST_QUICK", "0") == "1"
 
+from repro.core.distributed import norm_band_partition
 from repro.core.search import _dedup_ids
 from repro.core.norms import (
     norm_group_of,
@@ -91,6 +92,47 @@ def test_theorem2_conditional_matches_monte_carlo(beta, gamma, xn, yn):
     xz = z @ x
     assert abs(xz.mean() - mean) < 5 * std / np.sqrt(n_mc) + 1e-3
     assert abs(xz.std() - std) < 0.05 * std + 1e-3
+
+
+@given(st.integers(1, 200), st.integers(1, 24), st.integers(0, 3))
+@settings(**SETTINGS)
+def test_norm_band_partition_is_permutation_with_true_bounds(n, p, dist):
+    """The two invariants the shard-routing skip rule rests on
+    (core/distributed.py): the union of the bands is an EXACT permutation of
+    the catalog (no item lost or duplicated by banding), and every band's
+    recorded max_norm is a TRUE upper bound on its members — if either
+    broke, a "provably unable" skipped shard could actually hold a top-k
+    answer.  Also pins the ordering contract: band 0 holds the largest
+    norms, bands are count-balanced to ceil(n/p), and ties break
+    deterministically (stable by id)."""
+    rng = np.random.default_rng(n * 97 + p * 13 + dist)
+    norms = [
+        rng.uniform(0.0, 2.0, n),
+        rng.lognormal(0.0, 0.6, n),
+        np.full(n, 1.0),                       # all ties
+        np.round(rng.uniform(0, 3, n)),        # heavy ties
+    ][dist]
+    bands, band_max = norm_band_partition(norms, p)
+    assert len(bands) == p and band_max.shape == (p,)
+    # exact permutation
+    union = np.concatenate([b for b in bands]) if p else np.array([])
+    assert sorted(union.tolist()) == list(range(n))
+    # count balance: every band holds ceil(n/p) items except a ragged tail
+    per = -(-n // p)
+    assert all(len(b) == per for b in bands[: n // per])
+    # true upper bound, and descending band order
+    prev_min = np.inf
+    for b, mx in zip(bands, band_max):
+        if len(b) == 0:
+            assert mx == 0.0
+            continue
+        assert norms[b].max() <= mx + 1e-12
+        assert norms[b].max() <= prev_min + 1e-12   # bands are norm-sorted
+        prev_min = norms[b].min()
+    # determinism (stable tie-break): same input, same partition
+    bands2, _ = norm_band_partition(norms, p)
+    for a, b in zip(bands, bands2):
+        assert np.array_equal(a, b)
 
 
 @given(st.integers(5, 200), st.integers(1, 20))
